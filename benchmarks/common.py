@@ -1,0 +1,70 @@
+"""Shared benchmark fixture: a small LM trained on the Zipf-Markov corpus so
+compression methods see *real* (trained, correlated, outlier-bearing)
+activation statistics — the paper's regime at reduced scale. Cached on disk
+so every table reuses the same model."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_tiny_config
+from repro.core import metrics
+from repro.data import DataConfig, ZipfMarkov, calibration_batches
+from repro.models import build_model
+from repro.optim import OptimizerConfig
+from repro.training.train_loop import TrainConfig, make_train_step
+
+CACHE = os.path.join(os.path.dirname(__file__), "..", "results", "bench_model")
+TRAIN_STEPS = 200
+
+
+def trained_bench_model(arch: str = "llama2-7b"):
+    """(model, params, calib_batches, eval_batches). The tiny preset of the
+    paper's own Table-1 target (llama2-7b family)."""
+    cfg = get_tiny_config(arch)
+    model = build_model(cfg, remat=False)
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=64, global_batch=16)
+    gen = ZipfMarkov(dc)
+    mgr = CheckpointManager(os.path.abspath(CACHE), keep_n=1)
+    params_t = model.init(jax.random.PRNGKey(0))
+    if mgr.latest_step() == TRAIN_STEPS:
+        params, _ = mgr.restore_latest(params_t)
+    else:
+        tcfg = TrainConfig(optimizer=OptimizerConfig(
+            lr=1e-3, warmup_steps=20, total_steps=TRAIN_STEPS))
+        step_fn, opt_init = make_train_step(model, tcfg)
+        state = {"params": params_t, "opt": opt_init(params_t),
+                 "step": jnp.zeros((), jnp.int32)}
+        jstep = jax.jit(step_fn, donate_argnums=0)
+        for i in range(TRAIN_STEPS):
+            t, l = gen.batch(i)
+            state, m = jstep(state, {"tokens": jnp.asarray(t),
+                                     "labels": jnp.asarray(l)})
+        params = state["params"]
+        mgr.save(TRAIN_STEPS, params)
+    calib = [{"tokens": jnp.asarray(t), "labels": jnp.asarray(l)}
+             for t, l in calibration_batches(dc, 4)]
+    eval_batches = [gen.batch(5000 + i) for i in range(4)]
+    return model, params, calib, eval_batches
+
+
+def ppl(model, params, eval_batches) -> float:
+    def loss_fn(params, tokens, labels):
+        _, m = jax.jit(model.loss)(params, {"tokens": tokens,
+                                            "labels": labels})
+        return m["sum_nll"], m["tokens"]
+    return metrics.perplexity(
+        loss_fn, params,
+        [(jnp.asarray(t), jnp.asarray(l)) for t, l in eval_batches])
+
+
+def timed(fn, *args, reps: int = 3):
+    fn(*args)                                   # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6   # µs

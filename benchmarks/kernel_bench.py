@@ -1,0 +1,55 @@
+"""Kernel microbenchmarks: Pallas (interpret on CPU; native on TPU) vs the
+jnp oracle, with FLOP-derived throughput. On this CPU container the µs are
+indicative only — the structural payload is the HLO/roofline work in
+benchmarks/roofline_report.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timed
+from repro.kernels import ops
+from repro.quant.qtensor import QTensor
+
+
+def run():
+    rng = np.random.default_rng(0)
+    rows = []
+    m, k = 256, 512
+    w = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    th = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(k, k)), jnp.float32)
+
+    flops = 2 * m * k * k
+    for use in (True, False):
+        us = timed(lambda: ops.awp_pgd_step(w, th, c, 0.1, use_pallas=use))
+        rows.append((f"awp_pgd_step[{'pallas' if use else 'jnp'}]", us,
+                     f"{flops / us / 1e3:.1f}GFLOP/s"))
+
+    for use in (True, False):
+        us = timed(lambda: ops.topk_row(w, k // 2, use_pallas=use))
+        rows.append((f"topk_row[{'pallas' if use else 'jnp'}]", us,
+                     f"{m * k / us:.0f}elem/us"))
+
+    for use in (True, False):
+        us = timed(lambda: ops.quant_project(w, 4, 128, use_pallas=use))
+        rows.append((f"quant_proj[{'pallas' if use else 'jnp'}]", us,
+                     f"{m * k / us:.0f}elem/us"))
+
+    qt = QTensor.from_dense(w, 4, 128)
+    x = jnp.asarray(rng.normal(size=(64, k)), jnp.float32)
+    for use in (True, False):
+        us = timed(lambda: ops.dequant_matmul(x, qt.packed, qt.scale, qt.zero,
+                                              128, use_pallas=use))
+        rows.append((f"dequant_matmul[{'pallas' if use else 'jnp'}]", us,
+                     f"{2 * 64 * m * k / us / 1e3:.1f}GFLOP/s"))
+    return rows
+
+
+def main():
+    print("kernel,us_per_call,derived")
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

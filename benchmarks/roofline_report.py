@@ -1,0 +1,38 @@
+"""Render the §Roofline table from the dry-run JSONs (results/dryrun/)."""
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load(mesh="single"):
+    d = os.path.join(RESULTS, mesh)
+    if not os.path.isdir(d):
+        return []
+    out = []
+    for f in sorted(os.listdir(d)):
+        if f.endswith(".json"):
+            with open(os.path.join(d, f)) as fh:
+                out.append(json.load(fh))
+    return out
+
+
+def fmt_row(c):
+    r = c["roofline"]
+    mem = c.get("memory", {}).get("total_per_device_bytes", 0) / 1e9
+    return (f"{c['arch']},{c['shape']},{c['mesh']},{c['chips']},"
+            f"{r['t_compute_s']:.4f},{r['t_memory_s']:.4f},"
+            f"{r['t_collective_s']:.4f},{r['bottleneck']},"
+            f"{r['useful_flops_frac']:.3f},{r['roofline_frac']:.3f},{mem:.2f}")
+
+
+def main():
+    print("arch,shape,mesh,chips,t_compute_s,t_memory_s,t_collective_s,"
+          "bottleneck,useful_flops_frac,roofline_frac,mem_GB_per_dev")
+    for mesh in ("single", "multi"):
+        for c in load(mesh):
+            print(fmt_row(c))
+
+
+if __name__ == "__main__":
+    main()

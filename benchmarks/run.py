@@ -1,0 +1,31 @@
+"""Benchmark driver — one section per paper table/figure, plus kernels and
+the dry-run roofline table. Prints ``name,us_per_call,derived`` style CSV
+per section."""
+import time
+import traceback
+
+
+def _section(name, main_fn):
+    print(f"\n=== {name} ===")
+    t0 = time.time()
+    try:
+        main_fn()
+        print(f"--- {name} done in {time.time() - t0:.1f}s")
+    except Exception:
+        traceback.print_exc()
+        print(f"--- {name} FAILED")
+
+
+def main() -> None:
+    from benchmarks import (table1_pruning, table3_quant, table4_joint,
+                            fig1_convergence, kernel_bench, roofline_report)
+    _section("table1_pruning (paper Tables 1-2)", table1_pruning.main)
+    _section("table3_quant (paper Table 3)", table3_quant.main)
+    _section("table4_joint (paper Tables 4-5)", table4_joint.main)
+    _section("fig1_convergence (paper Figure 1)", fig1_convergence.main)
+    _section("kernel_bench", kernel_bench.main)
+    _section("roofline_report (EXPERIMENTS.md §Roofline)", roofline_report.main)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Table 3 analogue: perplexity of the INT4/INT3/INT2 quantized model for
+RTN / GPTQ / AWQ / AWP / AWP-S (scaled-space, beyond-paper)."""
+from benchmarks.common import trained_bench_model, ppl
+from repro.core.compress import CompressionConfig, compress_model
+
+BITS = (4, 3, 2)
+METHODS = ("rtn", "gptq", "awq", "awp_quant", "awp_quant_scaled")
+
+
+def run():
+    model, params, calib, eval_batches = trained_bench_model()
+    rows = [("dense", 16, ppl(model, params, eval_batches))]
+    table = {}
+    for method in METHODS:
+        for bits in BITS:
+            cfg = CompressionConfig(method=method, bits=bits, group_size=64)
+            cp, _ = compress_model(model, params, calib, cfg)
+            p = ppl(model, cp, eval_batches)
+            table[(method, bits)] = p
+            rows.append((method, bits, p))
+    checks = {
+        "awp<=rtn@4": table[("awp_quant", 4)] <= table[("rtn", 4)] * 1.001,
+        "awq~rtn@4(within1%)": table[("awq", 4)] <= table[("rtn", 4)] * 1.01,
+        "awp_s<=awq@4": table[("awp_quant_scaled", 4)] <= table[("awq", 4)] * 1.02,
+        "int2_degrades": table[("awp_quant", 2)] > table[("awp_quant", 4)],
+    }
+    return rows, checks
+
+
+def main():
+    rows, checks = run()
+    print("method,bits,ppl")
+    for m, b, p in rows:
+        print(f"{m},{b},{p:.4f}")
+    for k, v in checks.items():
+        print(f"check,{k},{v}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""End-to-end compression driver: train a small LM → compress it with AWP
+and every baseline → compare perplexities (paper Tables 1-4 pipeline).
+
+    PYTHONPATH=src python examples/compress_llm.py [--steps 200] [--ratio 0.6]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_tiny_config
+from repro.core import metrics
+from repro.core.compress import CompressionConfig, compress_model
+from repro.data import DataConfig, ZipfMarkov, calibration_batches
+from repro.models import build_model
+from repro.optim import OptimizerConfig
+from repro.training.train_loop import TrainConfig, make_train_step
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--ratio", type=float, default=0.6)
+args = ap.parse_args()
+
+cfg = get_tiny_config("llama2-7b")
+model = build_model(cfg, remat=False)
+dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=64, global_batch=16)
+gen = ZipfMarkov(dc)
+
+print(f"training tiny llama2 ({cfg.num_layers}L d={cfg.d_model}) "
+      f"for {args.steps} steps ...")
+tcfg = TrainConfig(optimizer=OptimizerConfig(lr=1e-3, warmup_steps=20,
+                                             total_steps=args.steps))
+step_fn, opt_init = make_train_step(model, tcfg)
+params = model.init(jax.random.PRNGKey(0))
+state = {"params": params, "opt": opt_init(params),
+         "step": jnp.zeros((), jnp.int32)}
+jstep = jax.jit(step_fn, donate_argnums=0)
+for i in range(args.steps):
+    t, l = gen.batch(i)
+    state, m = jstep(state, {"tokens": jnp.asarray(t), "labels": jnp.asarray(l)})
+    if i % 50 == 0:
+        print(f"  step {i}: loss {float(m['loss']):.3f}")
+params = state["params"]
+
+calib = [{"tokens": jnp.asarray(t), "labels": jnp.asarray(l)}
+         for t, l in calibration_batches(dc, 4)]
+eval_batches = [gen.batch(7000 + i) for i in range(4)]
+
+def ppl(p):
+    def loss_fn(p, t, l):
+        _, m = jax.jit(model.loss)(p, {"tokens": t, "labels": l})
+        return m["sum_nll"], m["tokens"]
+    return metrics.perplexity(loss_fn, p, [
+        (jnp.asarray(t), jnp.asarray(l)) for t, l in eval_batches])
+
+print(f"\ndense perplexity: {ppl(params):.3f}")
+print(f"pruning to {args.ratio:.0%}:")
+for method in ("magnitude", "wanda", "awp_prune"):
+    cp, _ = compress_model(model, params, calib,
+                           CompressionConfig(method=method, ratio=args.ratio))
+    print(f"  {method:12s} ppl: {ppl(cp):.3f}")
+print("joint prune+INT4:")
+for method in ("awq_wanda", "wanda_awq", "awp_joint"):
+    cp, _ = compress_model(model, params, calib,
+                           CompressionConfig(method=method, ratio=args.ratio,
+                                             bits=4, group_size=64))
+    print(f"  {method:12s} ppl: {ppl(cp):.3f}")

@@ -1,0 +1,40 @@
+"""Quickstart: AWP on a single layer in ~30 lines (paper Algorithm 1).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import awp, calibration as calib
+from repro.core.baselines import magnitude, wanda
+
+rng = np.random.default_rng(0)
+
+# a "layer": weight W and calibration activations X with outlier channels
+d_in, d_out, n_tokens = 256, 128, 2048
+channel_scale = np.where(rng.random(d_in) < 0.1, 8.0, 1.0)
+X = rng.normal(size=(n_tokens, d_in)).astype(np.float32) * channel_scale
+W = jnp.asarray(rng.normal(size=(d_out, d_in)), jnp.float32)
+
+# C = (1/n) XᵀX — the only statistic AWP needs
+stats = calib.update(calib.init(d_in), jnp.asarray(X))
+C = calib.covariance(stats)
+
+# prune 70%: keep k = 0.3·d_in per row
+k = int(0.3 * d_in)
+result = awp.prune(W, C, k)          # η=2/‖C‖_F, Wanda init, ≤200 iters
+
+loss = lambda t: float(awp.activation_loss(W, t, C))
+print(f"magnitude  loss: {loss(magnitude.prune_weight(W, k)):.4f}")
+print(f"wanda      loss: {loss(wanda.prune_weight(W, C, k)):.4f}")
+print(f"AWP        loss: {loss(result.theta):.4f}   "
+      f"(iters={int(result.iters)}, ‖∇‖/‖W‖={float(result.grad_norm):.2e})")
+
+# quantize to INT4 instead (10 iters, RTN init) — same Algorithm 1
+q = awp.quantize(W, C, bits=4, group_size=128)
+print(f"AWP-INT4   loss: {loss(q.theta):.4f}")
+
+# or both at once (§4.3 joint recipe)
+j = awp.joint(W, C, k, bits=4, group_size=128)
+sparsity = float((np.asarray(j.theta) == 0).mean())
+print(f"AWP joint  loss: {loss(j.theta):.4f}   (sparsity={sparsity:.2f}, INT4)")

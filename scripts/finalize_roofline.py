@@ -1,0 +1,42 @@
+"""Append the final regenerated roofline table to EXPERIMENTS.md and write
+results/roofline_final.csv."""
+import io
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.roofline_report import load, fmt_row
+
+HEADER = ("arch,shape,mesh,chips,t_compute_s,t_memory_s,t_collective_s,"
+          "bottleneck,useful_flops_frac,roofline_frac,mem_GB_per_dev")
+
+
+def main():
+    rows = []
+    for mesh in ("single", "multi"):
+        for c in load(mesh):
+            rows.append(fmt_row(c))
+    csv = HEADER + "\n" + "\n".join(rows) + "\n"
+    with open("results/roofline_final.csv", "w") as f:
+        f.write(csv)
+
+    md = ["\n### Appended final table (generated "
+          "by scripts/finalize_roofline.py)\n", "```"]
+    md.append(HEADER.replace(",", " | "))
+    for r in rows:
+        md.append(r.replace(",", " | "))
+    md.append("```\n")
+    text = open("EXPERIMENTS.md").read()
+    marker = "### Appended final table"
+    if marker in text:
+        text = text[:text.index(marker) - 1]
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(text + "\n".join(md))
+    print(f"appended {len(rows)} rows")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,138 @@
+"""Roofline analysis from compiled dry-run artifacts (no hardware).
+
+Three terms per (arch × shape × mesh), hardware = TPU v5e per chip:
+    compute    = HLO_FLOPs / (chips × 197e12 FLOP/s bf16)
+    memory     = HLO_bytes / (chips × 819e9 B/s HBM)
+    collective = collective_bytes / (chips × 50e9 B/s per ICI link)
+
+HLO_FLOPs / HLO_bytes come from compiled.cost_analysis(). collective_bytes
+is parsed from the optimized HLO text: the summed operand bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # B/s per chip
+ICI_BW = 50e9                # B/s per link (assignment constant)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  f32[16,128]{1,0}  |  bf16[2,4,8]  |  f32[] (scalar)
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum *output* shape bytes of every collective op in the HLO, by kind.
+
+    Notes: shapes in the optimized SPMD module are PER-PARTITION; the sum is
+    therefore per-device traffic (right for the per-chip roofline term).
+    Tuple-shaped collectives contribute every element."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # match "  <shape> <name> = <shape> op-name(" — instruction lines only
+        m = re.match(r"^(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*(.+?)\s*("
+                     + "|".join(_COLLECTIVES) + r")[\w\-\.]*\(", s)
+        if not m:
+            continue
+        shape_part, kind = m.group(1), m.group(2)
+        nbytes = sum(_shape_bytes(d, dims)
+                     for d, dims in _SHAPE_RE.findall(shape_part))
+        out[kind] += nbytes
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    collective_per_device: float
+    chips: int
+    model_flops: float = 0.0      # 6·N·D or 2·N·D (useful-work model)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_per_device / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        """MODEL_FLOPS / total HLO FLOPs (remat/redundancy waste detector)."""
+        tot = self.flops_per_device * self.chips
+        return self.model_flops / tot if tot else 0.0
+
+    @property
+    def roofline_frac(self) -> float:
+        """Useful-model-FLOPs throughput achievable at the bound, as a
+        fraction of pure-compute peak: (model_flops/chips/peak) / t_bound."""
+        ideal = self.model_flops / self.chips / PEAK_FLOPS
+        return ideal / self.t_bound if self.t_bound else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_per_device": self.collective_per_device,
+            "chips": self.chips,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_frac": self.useful_flops_frac,
+            "roofline_frac": self.roofline_frac,
+        }
+
+
+def from_compiled(compiled, chips: int, model_flops: float,
+                  hlo_text: Optional[str] = None) -> Roofline:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    nbytes = float(ca.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = sum(collective_bytes(text).values())
+    return Roofline(flops_per_device=flops, bytes_per_device=nbytes,
+                    collective_per_device=float(coll), chips=chips,
+                    model_flops=model_flops)
+
+
+__all__ = ["Roofline", "from_compiled", "collective_bytes",
+           "PEAK_FLOPS", "HBM_BW", "ICI_BW"]

@@ -1,0 +1,5 @@
+from repro.configs.base import (ModelConfig, ShapeConfig, SHAPES, shapes_for,
+                                get_config, get_tiny_config, list_archs)
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "shapes_for", "get_config",
+           "get_tiny_config", "list_archs"]

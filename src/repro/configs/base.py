@@ -1,0 +1,161 @@
+"""Unified architecture config system + registry.
+
+Each assigned architecture lives in ``configs/<id>.py`` exposing ``CONFIG``
+(exact published dims) and ``TINY`` (a reduced same-family preset for CPU
+smoke tests). Select with ``--arch <id>`` anywhere in the launchers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional
+
+_ARCH_IDS = [
+    "qwen3-moe-235b-a22b", "grok-1-314b", "nemotron-4-340b",
+    "starcoder2-15b", "starcoder2-7b", "granite-8b", "falcon-mamba-7b",
+    "musicgen-medium", "zamba2-1.2b", "internvl2-1b",
+    # paper's own evaluation models
+    "llama2-7b", "llama2-13b", "llama31-8b", "llama32-1b",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int                   # dense MLP dim; for moe = per-expert dim
+    vocab_size: int
+    head_dim: int = 0           # 0 -> d_model // num_heads
+    # --- MoE ---
+    num_experts: int = 0
+    experts_per_token: int = 0
+    capacity_factor: float = 1.25
+    # --- SSM (mamba1/mamba2) ---
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64      # mamba2 only
+    # --- hybrid (zamba2): one shared attention block every `attn_every` ---
+    attn_every: int = 0
+    # --- misc ---
+    mlp_act: str = "silu"       # silu (gated) | relu2 | gelu (non-gated)
+    rope_theta: float = 1e4
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    frontend: Optional[str] = None   # audio_frames | vision_patches (stubs)
+    num_patches: int = 0             # vlm prefix length
+    source: str = ""                 # provenance note
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Embedding/head rows padded to a TP-shardable, lane-aligned
+        multiple (vocab_size stays the logical vocabulary; padded logit
+        columns are masked to -inf in the loss). internvl2's 151655 is odd
+        and would otherwise replicate 5 GB logits per device."""
+        if self.vocab_size >= 2048:
+            return -(-self.vocab_size // 2048) * 2048
+        return -(-self.vocab_size // 128) * 128
+
+    @property
+    def d_inner(self) -> int:        # ssm inner width
+        return self.ssm_expand * self.d_model
+
+    def param_count(self) -> int:
+        """Total parameter count N (for 6·N·D roofline model flops)."""
+        d, L = self.d_model, self.num_layers
+        hd = self.resolved_head_dim if self.num_heads else 0
+        attn = d * (self.num_heads * hd) * 2 + d * (self.num_kv_heads * hd) * 2
+        if self.family in ("dense", "audio", "vlm"):
+            gate = 3 if self.mlp_act == "silu" else 2
+            mlp = gate * d * self.d_ff
+            per_layer = attn + mlp
+            n = L * per_layer
+        elif self.family == "moe":
+            gate = 3 if self.mlp_act == "silu" else 2
+            mlp = gate * d * self.d_ff * self.num_experts + d * self.num_experts
+            n = L * (attn + mlp)
+        elif self.family == "ssm":
+            di, N = self.d_inner, self.ssm_state
+            per = d * 2 * di + di * self.ssm_conv + di * (2 * N + 1) + di + di * d
+            n = L * per
+        elif self.family == "hybrid":
+            di, N = self.d_inner, self.ssm_state
+            nh = di // self.ssm_head_dim
+            per = d * 2 * di + di * self.ssm_conv + di * N * 2 // (di // nh) + di + di * d
+            mamba = L * (d * 2 * di + di * self.ssm_conv + 3 * nh + di + di * d)
+            gate3 = 3 if self.mlp_act == "silu" else 2
+            shared = attn + gate3 * d * self.d_ff
+            n = mamba + shared
+        else:
+            raise ValueError(self.family)
+        n += d * self.vocab_size * (1 if self.tie_embeddings else 2)
+        return int(n)
+
+    def active_param_count(self) -> int:
+        """N_active for MoE (6·N_active·D)."""
+        if self.family != "moe":
+            return self.param_count()
+        d, L = self.d_model, self.num_layers
+        hd = self.resolved_head_dim
+        attn = d * (self.num_heads * hd) * 2 + d * (self.num_kv_heads * hd) * 2
+        gate = 3 if self.mlp_act == "silu" else 2
+        mlp = gate * d * self.d_ff * self.experts_per_token + d * self.num_experts
+        return int(L * (attn + mlp) + 2 * d * self.vocab_size)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                   # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k":    ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k":  ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k":   ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+# archs whose attention is full/quadratic skip long_500k (DESIGN.md §5)
+SUBQUADRATIC_FAMILIES = ("ssm", "hybrid")
+
+
+def shapes_for(cfg: ModelConfig):
+    out = []
+    for s in SHAPES.values():
+        if s.name == "long_500k" and cfg.family not in SUBQUADRATIC_FAMILIES:
+            continue   # full attention at 524k is not sub-quadratic: SKIP
+        out.append(s)
+    return out
+
+
+def _module_name(arch_id: str) -> str:
+    return "repro.configs." + arch_id.replace("-", "_").replace(".", "p")
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    mod = importlib.import_module(_module_name(arch_id))
+    return mod.CONFIG
+
+
+def get_tiny_config(arch_id: str) -> ModelConfig:
+    mod = importlib.import_module(_module_name(arch_id))
+    return mod.TINY
+
+
+def list_archs(include_paper: bool = True):
+    return list(_ARCH_IDS) if include_paper else _ARCH_IDS[:10]
+
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "shapes_for", "get_config",
+           "get_tiny_config", "list_archs"]

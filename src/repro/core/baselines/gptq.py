@@ -1,0 +1,70 @@
+"""GPTQ (Frantar et al., 2022) — OBS-based group quantization with error
+propagation. Same Hessian machinery as SparseGPT; columns are quantized left
+to right, the incurred error is folded into the remaining columns, and group
+scales (group_size=128, asymmetric min/max, per output row) are refreshed at
+every group boundary from the *current* (error-corrected) weights.
+Sequential over columns → numpy host implementation (baseline-only path).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.baselines.sparsegpt import _prepare_hinv
+
+
+def _group_qparams(block: np.ndarray, bits: int):
+    """Asymmetric min/max scale+zero per row for one group of columns."""
+    gmax = block.max(axis=1)
+    gmin = block.min(axis=1)
+    qmax = 2 ** bits - 1
+    scale = np.maximum((gmax - gmin) / qmax, 1e-8)
+    zero = np.clip(np.round(-gmin / scale), 0, qmax)
+    return scale, zero, qmax
+
+
+def _quant_col(col, scale, zero, qmax):
+    q = np.clip(np.round(col / scale) + zero, 0, qmax)
+    return (q - zero) * scale
+
+
+def quantize_weight(w, c, bits: int, group_size: int = 128,
+                    blocksize: int = 128) -> np.ndarray:
+    """Quantize w (d_out, d_in) to INT-`bits` with per-(row, group) scales."""
+    w = np.array(w, dtype=np.float64, copy=True)
+    d_out, d_in = w.shape
+    hinv = _prepare_hinv(np.asarray(c, np.float64))
+    dead = np.diag(np.asarray(c)) == 0
+    w[:, dead] = 0.0
+
+    scale = zero = None
+    qmax = 2 ** bits - 1
+    for i1 in range(0, d_in, blocksize):
+        i2 = min(i1 + blocksize, d_in)
+        count = i2 - i1
+        w1 = w[:, i1:i2].copy()
+        q1 = np.zeros_like(w1)
+        err1 = np.zeros_like(w1)
+        hinv1 = hinv[i1:i2, i1:i2]
+        for j in range(count):
+            col_idx = i1 + j
+            if col_idx % group_size == 0:
+                g_end = min(col_idx + group_size, d_in)
+                # scales from the error-corrected current weights
+                g_block = np.concatenate(
+                    [w1[:, j:min(j + group_size, count)],
+                     w[:, i2:g_end]], axis=1) if g_end > i2 else \
+                    w1[:, j:j + (g_end - col_idx)]
+                scale, zero, qmax = _group_qparams(g_block, bits)
+            wj = w1[:, j]
+            d = hinv1[j, j]
+            q = _quant_col(wj, scale, zero, qmax)
+            q1[:, j] = q
+            err = (wj - q) / d
+            w1[:, j:] -= np.outer(err, hinv1[j, j:])
+            err1[:, j] = err
+        w[:, i1:i2] = q1
+        w[:, i2:] -= err1 @ hinv[i1:i2, i2:]
+    return w.astype(np.float32)
+
+
+__all__ = ["quantize_weight"]

@@ -1,0 +1,20 @@
+"""Magnitude pruning — the activation-blind baseline of Eq. (1)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.core import projections as proj
+
+
+@functools.partial(jax.jit, static_argnames=("k", "per_row"))
+def prune_weight(w: jax.Array, k: int, per_row: bool = True) -> jax.Array:
+    """Keep the k largest-|w| per row (Wanda's comparison-group convention,
+    which the paper's Tables 1-2 use) or k·d_out globally."""
+    if per_row:
+        return proj.topk_row(w, k)
+    return proj.topk_matrix(w, k * w.shape[0])
+
+
+__all__ = ["prune_weight"]

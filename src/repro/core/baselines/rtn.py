@@ -1,0 +1,18 @@
+"""Round-To-Nearest group quantization — the activation-blind quant baseline
+and AWP's quantization initializer (§4.2)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.core import projections as proj
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group_size"))
+def quantize_weight(w: jax.Array, bits: int, group_size: int = 128) -> jax.Array:
+    """Group-wise asymmetric min/max quantize-dequantize of W itself."""
+    return proj.quant_project(w, bits, group_size)
+
+
+__all__ = ["quantize_weight"]

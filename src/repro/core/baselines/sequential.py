@@ -1,0 +1,28 @@
+"""Sequential prune→quant / quant→prune pipelines — Table 4/5 baselines.
+
+Wanda+AWQ  = prune first with Wanda, then AWQ-quantize the pruned weight and
+             re-apply the sparsity mask (quantization can perturb zeros).
+AWQ+Wanda  = quantize first with AWQ, then Wanda-prune the quantized weight.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.baselines import awq, wanda
+
+
+def wanda_then_awq(w, c, act_mean_abs, k: int, bits: int = 4,
+                   group_size: int = 128):
+    pruned = wanda.prune_weight(w, c, k)
+    mask = pruned != 0
+    q = awq.quantize_weight(pruned, c, act_mean_abs, bits, group_size)
+    return jnp.where(mask, q, 0.0)
+
+
+def awq_then_wanda(w, c, act_mean_abs, k: int, bits: int = 4,
+                   group_size: int = 128):
+    q = awq.quantize_weight(w, c, act_mean_abs, bits, group_size)
+    return wanda.prune_weight(q, c, k)
+
+
+__all__ = ["wanda_then_awq", "awq_then_wanda"]

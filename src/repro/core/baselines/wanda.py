@@ -1,0 +1,45 @@
+"""Wanda (Sun et al. 2023): prune by |W_ij| · ‖X[j, :]‖₂, row-wise groups.
+
+Equivalent to approximating C^½ by its diagonal in Eq. (3). Also serves as
+AWP's pruning initializer (§4.1). Operates in paper orientation (d_out, d_in);
+the activation scale multiplies *columns* (input channels).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import projections as proj
+
+
+def scores(w: jax.Array, c: jax.Array) -> jax.Array:
+    """Wanda importance scores. ‖X[j,:]‖₂ = sqrt(n·C_jj) ∝ sqrt(C_jj); the
+    per-column scale is monotone so the constant n drops out of top-k."""
+    col_scale = jnp.sqrt(jnp.maximum(jnp.diagonal(c), 0.0))
+    return jnp.abs(w) * col_scale[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def prune_weight(w: jax.Array, c: jax.Array, k: int) -> jax.Array:
+    """Zero everything outside the per-row top-k of the Wanda score."""
+    s = scores(w, c)
+    _, idx = jax.lax.top_k(s, k)
+    rows = jnp.arange(w.shape[0])[:, None]
+    mask = jnp.zeros(w.shape, dtype=bool).at[rows, idx].set(True)
+    return jnp.where(mask, w, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "m"))
+def prune_weight_n_m(w: jax.Array, c: jax.Array, n: int = 2, m: int = 4) -> jax.Array:
+    """N:M structured Wanda (keep n of every m by score)."""
+    s = scores(w, c)
+    d_out, d_in = w.shape
+    g_s = s.reshape(d_out, d_in // m, m)
+    _, idx = jax.lax.top_k(g_s, n)
+    mask = jax.nn.one_hot(idx, m, dtype=bool).any(axis=-2)
+    return (w.reshape(d_out, d_in // m, m) * mask).reshape(d_out, d_in)
+
+
+__all__ = ["scores", "prune_weight", "prune_weight_n_m"]

@@ -1,0 +1,73 @@
+"""Calibration statistics for activation-aware compression.
+
+Accumulates, per linear layer, the input auto-correlation ``C = (1/n) X Xᵀ``
+(paper Alg. 1) plus the per-channel mean |x| that AWQ-style baselines need.
+Streaming: batches are folded in one at a time so the full calibration set is
+never materialized. Distributed: each data-parallel worker folds its local
+shard and :func:`cross_replica` psums the sufficient statistics once per layer
+— the only collective in the whole compression pass.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CalibStats(NamedTuple):
+    """Sufficient statistics for one linear layer's input activations."""
+    n: jax.Array          # scalar f32 — total token count folded in
+    c_sum: jax.Array      # (d_in, d_in) f32 — Σ xᵀx
+    abs_sum: jax.Array    # (d_in,) f32 — Σ |x| (AWQ act scales)
+
+
+def init(d_in: int) -> CalibStats:
+    return CalibStats(n=jnp.zeros((), jnp.float32),
+                      c_sum=jnp.zeros((d_in, d_in), jnp.float32),
+                      abs_sum=jnp.zeros((d_in,), jnp.float32))
+
+
+def update(stats: CalibStats, acts: jax.Array) -> CalibStats:
+    """Fold a batch of activations. acts: (..., d_in) — leading dims are
+    flattened into tokens (the paper's n counts tokens)."""
+    a = acts.reshape(-1, acts.shape[-1]).astype(jnp.float32)
+    return CalibStats(
+        n=stats.n + a.shape[0],
+        c_sum=stats.c_sum + a.T @ a,
+        abs_sum=stats.abs_sum + jnp.abs(a).sum(axis=0),
+    )
+
+
+def cross_replica(stats: CalibStats, axis_name) -> CalibStats:
+    """psum sufficient statistics across a data-parallel mesh axis (or tuple
+    of axes). Call once after all local batches are folded."""
+    return jax.tree.map(lambda x: jax.lax.psum(x, axis_name), stats)
+
+
+def covariance(stats: CalibStats, damp: float = 0.0) -> jax.Array:
+    """C = (1/n) Σ xᵀx, optionally damped by ``damp·mean(diag(C))·I``.
+
+    Damping is the standard guard (SparseGPT uses 1%) for layers whose
+    calibration slice is rank-deficient — e.g. MoE experts that routed few
+    tokens (DESIGN.md §5)."""
+    n = jnp.maximum(stats.n, 1.0)
+    c = stats.c_sum / n
+    if damp:
+        d_in = c.shape[0]
+        c = c + (damp * jnp.trace(c) / d_in) * jnp.eye(d_in, dtype=c.dtype)
+    return c
+
+
+def act_mean_abs(stats: CalibStats) -> jax.Array:
+    """Per-channel mean |x| (AWQ's activation scale)."""
+    return stats.abs_sum / jnp.maximum(stats.n, 1.0)
+
+
+def col_l2(stats: CalibStats) -> jax.Array:
+    """Per-channel ‖X[i, :]‖₂ (Wanda's activation scale) = sqrt(n·C_ii)."""
+    return jnp.sqrt(jnp.maximum(jnp.diagonal(stats.c_sum), 0.0))
+
+
+__all__ = ["CalibStats", "init", "update", "cross_replica", "covariance",
+           "act_mean_abs", "col_l2"]

@@ -1,0 +1,232 @@
+"""Whole-model layer-wise compression driver (the paper's pipeline).
+
+Sequential block-wise compression with error propagation, exactly like the
+GPTQ/SparseGPT/AWQ reference pipelines the paper compares against:
+
+  1. embed the calibration batches,
+  2. per block: capture every linear's input activations → fold into
+     per-linear CalibStats (per-*expert* stats for MoE blocks),
+  3. compress each linear with the selected method,
+  4. re-run the block with compressed weights to produce the next block's
+     (error-propagated) inputs.
+
+Weights are stored (d_in, d_out); the compression math runs in paper
+orientation (d_out, d_in) — transposed at this boundary only.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import awp, calibration as calib
+from repro.core import projections as proj
+from repro.core.baselines import (magnitude, wanda, sparsegpt, rtn, awq, gptq,
+                                  sequential)
+
+METHODS = ("magnitude", "wanda", "sparsegpt", "awp_prune", "awp_prune_nm",
+           "rtn", "awq", "gptq", "awp_quant", "awp_quant_scaled",
+           "awp_joint", "wanda_awq", "awq_wanda")
+
+
+def effective_group(d_in: int, group_size: int) -> int:
+    """Largest divisor of d_in that is ≤ group_size (tiny models have
+    d_in < 128; production dims are multiples of 128)."""
+    g = min(group_size, d_in)
+    while d_in % g:
+        g -= 1
+    return g
+
+
+@dataclasses.dataclass
+class CompressionConfig:
+    method: str = "awp_prune"
+    ratio: float = 0.5           # pruning ratio p (fraction zeroed)
+    bits: int = 4
+    group_size: int = 128
+    damp: float = 0.01           # covariance damping (MoE low-token guard)
+    skip: tuple = ()             # linear-name substrings to leave dense
+
+
+def _k_for(cfg: CompressionConfig, d_in: int) -> int:
+    return max(1, int(round((1.0 - cfg.ratio) * d_in)))
+
+
+def compress_weight(w_paper: jax.Array, stats: calib.CalibStats,
+                    cfg: CompressionConfig) -> jax.Array:
+    """Compress one weight (paper orientation) with the configured method."""
+    d_in = w_paper.shape[1]
+    c = calib.covariance(stats, damp=cfg.damp)
+    am = calib.act_mean_abs(stats)
+    k = _k_for(cfg, d_in)
+    g = effective_group(d_in, cfg.group_size)
+    m = cfg.method
+    if m == "magnitude":
+        return magnitude.prune_weight(w_paper, k)
+    if m == "wanda":
+        return wanda.prune_weight(w_paper, c, k)
+    if m == "sparsegpt":
+        return jnp.asarray(sparsegpt.prune_weight(
+            np.asarray(w_paper, np.float32), np.asarray(c, np.float64), k))
+    if m == "awp_prune":
+        return awp.prune(w_paper, c, k).theta
+    if m == "awp_prune_nm":
+        return awp.prune(w_paper, c, k, nm=(2, 4)).theta
+    if m == "rtn":
+        return rtn.quantize_weight(w_paper, cfg.bits, g)
+    if m == "awq":
+        return awq.quantize_weight(w_paper, c, am, cfg.bits, g)
+    if m == "gptq":
+        return jnp.asarray(gptq.quantize_weight(
+            np.asarray(w_paper, np.float32), np.asarray(c, np.float64),
+            cfg.bits, g))
+    if m == "awp_quant":
+        return awp.quantize(w_paper, c, cfg.bits, group_size=g).theta
+    if m == "awp_quant_scaled":
+        return awp.quantize_scaled(w_paper, c, am, cfg.bits, group_size=g).theta
+    if m == "awp_joint":
+        return awp.joint(w_paper, c, k, cfg.bits, group_size=g).theta
+    if m == "wanda_awq":
+        return sequential.wanda_then_awq(w_paper, c, am, k, cfg.bits, g)
+    if m == "awq_wanda":
+        return sequential.awq_then_wanda(w_paper, c, am, k, cfg.bits, g)
+    raise ValueError(f"unknown method {cfg.method!r}")
+
+
+# ---------------------------------------------------------------------------
+# capture folding
+# ---------------------------------------------------------------------------
+
+def _fold_captures(stats: Dict[str, Any], caps: Dict[str, jax.Array],
+                   num_experts: int):
+    """Fold one batch's captures into the per-capture-key stats dict."""
+    for key, val in caps.items():
+        if key in ("moe_mask", "moe_up"):
+            continue
+        if key == "moe_in":
+            x = val                                     # (T, d)
+            mask = caps["moe_mask"].astype(jnp.float32) # (T, E)
+            up = caps["moe_up"]                         # (T, E, f)
+            for e in range(num_experts):
+                me = mask[:, e:e + 1]
+                st = stats.setdefault(("moe", e), calib.init(x.shape[-1]))
+                stats[("moe", e)] = calib.update(st, x * me)
+                std = stats.setdefault(("moe_down", e),
+                                       calib.init(up.shape[-1]))
+                stats[("moe_down", e)] = calib.update(std, up[:, e, :] * me)
+            continue
+        d_in = val.shape[-1]
+        st = stats.setdefault(key, calib.init(d_in))
+        stats[key] = calib.update(st, val)
+
+
+def _stats_for(stats, cap_key: str, name: str):
+    if cap_key in ("moe", "moe_down"):
+        e = int(name.rsplit("_", 1)[1])
+        return stats[(cap_key, e)]
+    return stats[cap_key]
+
+
+# ---------------------------------------------------------------------------
+# param tree get/set by path (supports int expert index inside stacked leaves)
+#
+# Path grammar: dict keys, optionally ending in one int (expert index); a
+# leading "blocks" key means the leaf is layer-stacked and ``layer`` selects
+# the leading dim. E.g. ("blocks","moe","wu", e) → params[...]["wu"][layer, e].
+# ---------------------------------------------------------------------------
+
+def _resolve(path, layer: Optional[int]):
+    dict_path = [p for p in path if not isinstance(p, int)]
+    idx = tuple(p for p in path if isinstance(p, int))
+    if dict_path[0] == "blocks" and layer is not None:
+        idx = (layer,) + idx
+    return dict_path, idx
+
+
+def get_linear(params, path, layer: Optional[int]) -> jax.Array:
+    """Return weight in PAPER orientation (d_out, d_in)."""
+    dict_path, idx = _resolve(path, layer)
+    leaf = params
+    for p in dict_path:
+        leaf = leaf[p]
+    if idx:
+        leaf = leaf[idx]
+    return leaf.T
+
+
+def _tree_set(params, path, layer: Optional[int], value):
+    """Functional write of one (d_in, d_out)-oriented weight back in place."""
+    dict_path, idx = _resolve(path, layer)
+
+    def rec(node, rest):
+        out = dict(node)
+        key = rest[0]
+        if len(rest) == 1:
+            leaf = node[key]
+            v = value.astype(leaf.dtype)
+            out[key] = leaf.at[idx].set(v) if idx else v
+        else:
+            out[key] = rec(node[key], rest[1:])
+        return out
+
+    return rec(params, dict_path)
+
+
+# ---------------------------------------------------------------------------
+# the driver
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LayerReport:
+    block: int
+    name: str
+    loss_before: float           # activation loss of uncompressed (=0)
+    loss_after: float            # normalized activation-aware loss
+    sparsity: float
+    seconds: float
+
+
+def compress_model(model, params, calib_batches: List[dict],
+                   cfg: CompressionConfig, verbose: bool = False):
+    """Compress every linear of every block. Returns (params, reports)."""
+    num_experts = getattr(model.cfg, "num_experts", 0)
+    hs = [model.embed(params, b) for b in calib_batches]
+    reports: List[LayerReport] = []
+    skip = tuple(cfg.skip)
+
+    for i in range(model.num_blocks()):
+        # 1) capture calibration statistics for this block
+        stats: Dict[Any, calib.CalibStats] = {}
+        for h in hs:
+            _, caps = model.block_apply_one(params, i, h, capture=True)
+            _fold_captures(stats, caps, num_experts)
+        # 2) compress each linear
+        for (name, path, cap_key) in model.block_linears(i):
+            if any(s in name for s in skip):
+                continue
+            layer = i if path[0] == "blocks" else None
+            w = get_linear(params, path, layer)
+            st = _stats_for(stats, cap_key, name)
+            if float(st.n) < 1:
+                continue                     # expert never routed: keep dense
+            t0 = time.time()
+            w_new = compress_weight(w, st, cfg)
+            c = calib.covariance(st, damp=cfg.damp)
+            loss = float(awp.activation_loss(w, w_new, c))
+            sp = float((np.asarray(w_new) == 0).mean())
+            reports.append(LayerReport(i, name, 0.0, loss, sp,
+                                       time.time() - t0))
+            if verbose:
+                print(f"  block {i} {name}: loss={loss:.4f} sparsity={sp:.2f}")
+            params = _tree_set(params, path, layer, w_new.T)
+        # 3) propagate compressed activations to the next block
+        hs = [model.block_apply_one(params, i, h)[0] for h in hs]
+    return params, reports
+
+
+__all__ = ["CompressionConfig", "compress_model", "compress_weight",
+           "LayerReport", "METHODS", "effective_group", "get_linear"]

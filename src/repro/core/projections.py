@@ -1,0 +1,154 @@
+"""Projection operators onto AWP constraint sets.
+
+All operators use the *paper orientation*: weights are ``(d_out, d_in)`` and
+"row" means an output row (one output neuron's fan-in), matching Eq. (5)'s
+row-wise sparsity set ``C_row`` and the group axis of group-wise quantization
+(groups tile the ``d_in`` axis, as in AWQ/GPTQ with group_size=128).
+
+Everything here is pure jnp and jit-friendly (static k / bits / group_size).
+The Pallas kernels in ``repro.kernels`` implement the hot ones for TPU; these
+are also their reference semantics (kernels/... /ref.py re-export from here).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Sparsity projections (hard thresholding, Proj_{C_row} etc.)
+# ---------------------------------------------------------------------------
+
+def topk_row(z: jax.Array, k: int) -> jax.Array:
+    """Keep the k largest-|.| entries of each row of z; zero the rest.
+
+    Exact-k semantics (ties broken by index, like ``jax.lax.top_k``).
+    z: (d_out, d_in) -> same shape.
+
+    Implemented with the rank (double-argsort) formulation rather than a
+    top_k + scatter: every op is row-local, so under SPMD row sharding the
+    projection partitions with ZERO collectives (the scatter version forced
+    XLA into cross-shard gathers — §Perf compress hillclimb, iteration 1).
+    """
+    if k >= z.shape[-1]:
+        return z
+    if k <= 0:
+        return jnp.zeros_like(z)
+    return jnp.where(topk_row_mask(z, k), z, 0)
+
+
+def topk_row_mask(z: jax.Array, k: int) -> jax.Array:
+    """Boolean keep-mask of :func:`topk_row` (rank-based, scatter-free)."""
+    if k >= z.shape[-1]:
+        return jnp.ones(z.shape, dtype=bool)
+    if k <= 0:
+        return jnp.zeros(z.shape, dtype=bool)
+    mag = jnp.abs(z)
+    order = jnp.argsort(-mag, axis=-1)      # stable: ties by index, as top_k
+    rank = jnp.argsort(order, axis=-1)
+    return rank < k
+
+
+def topk_matrix(z: jax.Array, k_total: int) -> jax.Array:
+    """Whole-matrix top-k (the unconstrained C_sparse variant of Eq. (1))."""
+    flat = z.reshape(-1)
+    out = topk_row(flat[None, :], k_total)[0]
+    return out.reshape(z.shape)
+
+
+def prune_n_m(z: jax.Array, n: int = 2, m: int = 4) -> jax.Array:
+    """N:M structured sparsity (e.g. NVIDIA 2:4): keep n largest-|.| of every
+    m consecutive entries along d_in. Paper §5 names this as future work; we
+    ship it as a first-class projection."""
+    d_out, d_in = z.shape
+    assert d_in % m == 0, f"d_in={d_in} not divisible by m={m}"
+    g = z.reshape(d_out, d_in // m, m)
+    _, idx = jax.lax.top_k(jnp.abs(g), n)                # (d_out, d_in/m, n)
+    mask = jax.nn.one_hot(idx, m, dtype=bool).any(axis=-2)
+    return (g * mask).reshape(d_out, d_in)
+
+
+def ramp_ratio(t: jax.Array, target: float, ramp_iters: int) -> jax.Array:
+    """Linear pruning-ratio schedule used by the joint recipe (§4.3):
+    ratio(t) = target * min(1, (t+1)/ramp_iters)."""
+    frac = jnp.minimum(1.0, (t.astype(jnp.float32) + 1.0) / float(ramp_iters))
+    return target * frac
+
+
+def topk_row_dynamic(z: jax.Array, keep_ratio: jax.Array) -> jax.Array:
+    """Row top-k where the *ratio* is a traced scalar (for the ramp schedule).
+
+    Implemented with a per-row rank threshold instead of a static k: entry is
+    kept iff its magnitude-rank within the row < keep_ratio * d_in.
+    Exact-k (rank is a strict ordering via argsort double-trick).
+    """
+    d_in = z.shape[-1]
+    mag = jnp.abs(z)
+    # rank[i, j] = position of z[i, j] in descending |z[i, :]| order
+    order = jnp.argsort(-mag, axis=-1)
+    rank = jnp.argsort(order, axis=-1)
+    k = jnp.round(keep_ratio * d_in).astype(jnp.int32)
+    return jnp.where(rank < k, z, 0)
+
+
+# ---------------------------------------------------------------------------
+# Quantization projection (Proj_{C_INTb}) — group-wise asymmetric min/max,
+# the AWQ/GPTQ convention with group_size=128.
+# ---------------------------------------------------------------------------
+
+class QuantParams(NamedTuple):
+    """Integer codes + affine dequant parameters for one weight matrix."""
+    q: jax.Array        # (d_out, n_groups, group) int8 codes in [0, 2^b-1]
+    scale: jax.Array    # (d_out, n_groups, 1) f32
+    zero: jax.Array     # (d_out, n_groups, 1) f32 (integer-valued zero point)
+
+
+def _group(z: jax.Array, group_size: int) -> jax.Array:
+    d_out, d_in = z.shape
+    assert d_in % group_size == 0, (d_in, group_size)
+    return z.reshape(d_out, d_in // group_size, group_size)
+
+
+def quant_params(z: jax.Array, bits: int, group_size: int = 128) -> QuantParams:
+    """Min/max asymmetric quantizer per (row, group)."""
+    g = _group(z, group_size).astype(jnp.float32)
+    gmax = g.max(axis=-1, keepdims=True)
+    gmin = g.min(axis=-1, keepdims=True)
+    qmax = float(2 ** bits - 1)
+    scale = jnp.maximum((gmax - gmin) / qmax, 1e-8)
+    zero = jnp.clip(jnp.round(-gmin / scale), 0.0, qmax)
+    q = jnp.clip(jnp.round(g / scale) + zero, 0.0, qmax).astype(jnp.int8 if bits <= 7 else jnp.int32)
+    return QuantParams(q=q, scale=scale, zero=zero)
+
+
+def dequant(qp: QuantParams, dtype=jnp.float32) -> jax.Array:
+    g = (qp.q.astype(jnp.float32) - qp.zero) * qp.scale
+    d_out, n_groups, group = g.shape
+    return g.reshape(d_out, n_groups * group).astype(dtype)
+
+
+def quant_project(z: jax.Array, bits: int, group_size: int = 128) -> jax.Array:
+    """Proj onto the INT-b group-quantizable set: quantize-dequantize."""
+    return dequant(quant_params(z, bits, group_size), dtype=z.dtype)
+
+
+def joint_project(z: jax.Array, keep_ratio: jax.Array, bits: int,
+                  group_size: int = 128) -> jax.Array:
+    """Joint prune+quant projection of §4.3: Proj_INTb(Proj_row(Z)).
+
+    Prune first to get the support, quantize the pruned matrix, then re-apply
+    the mask (quantizing can move pruned zeros off zero because the group
+    zero-point is not exactly representable)."""
+    pruned = topk_row_dynamic(z, keep_ratio)
+    mask = pruned != 0
+    return quant_project(pruned, bits, group_size) * mask
+
+
+__all__ = [
+    "QuantParams", "topk_row", "topk_row_mask", "topk_matrix", "prune_n_m",
+    "ramp_ratio", "topk_row_dynamic", "quant_params", "dequant",
+    "quant_project", "joint_project",
+]

@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, ZipfMarkov, calibration_batches
+
+__all__ = ["DataConfig", "ZipfMarkov", "calibration_batches"]

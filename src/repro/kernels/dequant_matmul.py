@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: fused int4 dequant-matmul  y = x · Wqᵀ — the serving
+payoff of AWP compression (weights stay packed in HBM; nibbles are unpacked
+and dequantized in VMEM right before the MXU contraction, so HBM traffic is
+~4 bits/weight instead of 16).
+
+Layout: packed (N, K/2) uint8 (low nibble = even k), scale/zero (N, K/group).
+Grid (M/bm, N/bn, K/bk), f32 accumulator scratch, K innermost.
+bk must be a multiple of group_size so each K-block sees whole groups.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, wp_ref, scale_ref, zero_ref, y_ref, acc_ref,
+            *, n_k: int, group: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    packed = wp_ref[...]                                # (bn, bk//2) uint8
+    lo = (packed & 0xF).astype(jnp.float32)
+    hi = (packed >> 4).astype(jnp.float32)
+    codes = jnp.stack([lo, hi], axis=-1).reshape(packed.shape[0], -1)  # (bn, bk)
+    bn, bk = codes.shape
+    g = codes.reshape(bn, bk // group, group)
+    deq = (g - zero_ref[...][..., None]) * scale_ref[...][..., None]
+    deq = deq.reshape(bn, bk)                           # (bn, bk) f32
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...].astype(jnp.float32), deq,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _emit():
+        y_ref[...] = acc_ref[...].astype(y_ref.dtype)
+
+
+def dequant_matmul(x: jax.Array, packed: jax.Array, scale: jax.Array,
+                   zero: jax.Array, *, group_size: int = 128,
+                   bm: int = 128, bn: int = 128, bk: int = 256,
+                   interpret: bool = False) -> jax.Array:
+    """x: (M, K) f32/bf16; packed: (N, K//2) uint8; scale/zero: (N, K//group).
+    Returns (M, N) = x @ dequant(W)ᵀ."""
+    m, k = x.shape
+    n = packed.shape[0]
+    assert packed.shape[1] * 2 == k
+    assert scale.shape == (n, k // group_size) == zero.shape
+    bk = max(group_size, (min(bk, k) // group_size) * group_size)
+    assert bk % group_size == 0 and bk % 2 == 0
+    bm, bn = min(bm, m), min(bn, n)
+    pm, pn, pk = (-m) % bm, (-n) % bn, (-k) % bk
+    if pm or pk:
+        x = jnp.pad(x, ((0, pm), (0, pk)))
+    if pn or pk:
+        packed = jnp.pad(packed, ((0, pn), (0, pk // 2)))
+        scale = jnp.pad(scale, ((0, pn), (0, pk // group_size)),
+                        constant_values=1.0)
+        zero = jnp.pad(zero, ((0, pn), (0, pk // group_size)))
+    mp, np_, kp = m + pm, n + pn, k + pk
+    n_k = kp // bk
+    sg = bk // group_size
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k, group=group_size),
+        grid=(mp // bm, np_ // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, bk // 2), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((bn, sg), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((bn, sg), lambda i, j, kk: (j, kk)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, packed, scale, zero)
+    return out[:m, :n]
+
+
+__all__ = ["dequant_matmul"]

@@ -1,0 +1,68 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode; on TPU they
+compile natively. ``use_pallas=False`` falls back to the jnp oracle — the
+switch the perf harness flips when comparing.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import awp_pgd as _awp_pgd
+from repro.kernels import topk_mask as _topk
+from repro.kernels import quant_proj as _quant
+from repro.kernels import dequant_matmul as _dq
+from repro.kernels import ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def awp_pgd_step(w, theta, c, eta, use_pallas: bool = True):
+    if not use_pallas:
+        return ref.awp_pgd_step(w, theta, c, eta)
+    return _awp_pgd.awp_pgd_step(w, theta, c, eta, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("k", "use_pallas"))
+def topk_row(z, k: int, use_pallas: bool = True):
+    if not use_pallas:
+        return ref.topk_row(z, k)
+    return _topk.topk_row(z, k, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group_size", "use_pallas"))
+def quant_project(z, bits: int, group_size: int = 128, use_pallas: bool = True):
+    if not use_pallas:
+        return ref.quant_project(z, bits, group_size)
+    return _quant.quant_project(z, bits, group_size, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("group_size", "use_pallas"))
+def dequant_matmul(x, packed, scale, zero, group_size: int = 128,
+                   use_pallas: bool = True):
+    if not use_pallas:
+        return ref.dequant_matmul(x, packed, scale, zero, group_size)
+    return _dq.dequant_matmul(x, packed, scale, zero, group_size=group_size,
+                              interpret=_interpret())
+
+
+def awp_prune_fused(w, c, k: int, eta, iters: int, theta0=None,
+                    use_pallas: bool = True):
+    """Full AWP pruning loop on the kernel path: fused PGD step + bisection
+    top-k per iteration (the production compression inner loop)."""
+    theta = w if theta0 is None else theta0
+    def body(theta, _):
+        z = awp_pgd_step(w, theta, c, eta, use_pallas=use_pallas)
+        return topk_row(z, k, use_pallas=use_pallas), None
+    theta, _ = jax.lax.scan(body, theta, None, length=iters)
+    return theta
+
+
+__all__ = ["awp_pgd_step", "topk_row", "quant_project", "dequant_matmul",
+           "awp_prune_fused"]

@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import projections as proj
+
+
+def awp_pgd_step(w, theta, c, eta):
+    """Z = Θ + η (W − Θ) C."""
+    return (theta.astype(jnp.float32)
+            + eta * (w.astype(jnp.float32) - theta.astype(jnp.float32))
+            @ c.astype(jnp.float32)).astype(w.dtype)
+
+
+def topk_row(z, k):
+    return proj.topk_row(z, k)
+
+
+def quant_project(z, bits, group_size=128):
+    return proj.quant_project(z, bits, group_size)
+
+
+def dequant_matmul(x, packed, scale, zero, group_size=128):
+    from repro.quant.qtensor import unpack_int4
+    codes = unpack_int4(packed).astype(jnp.float32)   # (N, K)
+    n, k = codes.shape
+    g = codes.reshape(n, k // group_size, group_size)
+    deq = ((g - zero[..., None]) * scale[..., None]).reshape(n, k)
+    return (x.astype(jnp.float32) @ deq.T).astype(x.dtype)
+
+
+__all__ = ["awp_pgd_step", "topk_row", "quant_project", "dequant_matmul"]

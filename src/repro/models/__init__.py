@@ -1,0 +1,3 @@
+from repro.models.model import build_model, batch_specs, make_batch
+
+__all__ = ["build_model", "batch_specs", "make_batch"]

@@ -1,0 +1,300 @@
+"""Shared model building blocks, pure JAX.
+
+Conventions:
+- Linear weights are stored ``(d_in, d_out)`` (activation @ weight). The
+  compression library uses the paper orientation ``(d_out, d_in)``; the
+  driver transposes at the boundary.
+- ``capture`` dicts collect pre-matmul activations for calibration; they are
+  only populated on the (non-scanned) per-block capture path.
+- All blocks take a ShardingRules (``rules``) and place logical-axis
+  constraints; with rules=NO_RULES they are no-ops.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import ShardingRules, NO_RULES, hint
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32) -> jax.Array:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms / rope / activations
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (B, S, H, D) with even D; positions: (B, S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs       # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mlp_act(x: jax.Array, kind: str) -> jax.Array:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    if kind == "relu2":                      # nemotron squared-ReLU
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# chunked causal flash attention (online softmax; never materializes S×S)
+# ---------------------------------------------------------------------------
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, q_offset=0,
+                    q_chunk: int = 1024, kv_chunk: int = 1024,
+                    p_dtype=jnp.float32) -> jax.Array:
+    """q: (B, Sq, H, D); k, v: (B, Skv, Hk, D) with H % Hk == 0.
+
+    Double-chunked online-softmax attention in pure JAX: an outer scan over
+    query chunks and an inner scan over KV chunks carrying (m, l, acc). Peak
+    memory is O(q_chunk × kv_chunk) per head — required for the 32k-prefill
+    and 4k-train shapes at production width (DESIGN.md §4).
+    ``q_offset`` is the absolute position of q[0] (decode/prefill continua).
+    """
+    b, sq, h, d = q.shape
+    _, skv, hk, _ = k.shape
+    assert h % hk == 0
+    g = h // hk
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    # pad seq dims to multiples of the chunk
+    def pad_to(x, mult, axis):
+        n = x.shape[axis]
+        pad = (-n) % mult
+        if pad == 0:
+            return x, n
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, pad)
+        return jnp.pad(x, widths), n
+    q, sq0 = pad_to(q, q_chunk, 1)
+    k, skv0 = pad_to(k, kv_chunk, 1)
+    v, _ = pad_to(v, kv_chunk, 1)
+    sq_p, skv_p = q.shape[1], k.shape[1]
+    nq, nk = sq_p // q_chunk, skv_p // kv_chunk
+
+    scale = 1.0 / math.sqrt(d)
+    kg = k.reshape(b, nk, kv_chunk, hk, d)
+    vg = v.reshape(b, nk, kv_chunk, hk, d)
+    qg = q.reshape(b, nq, q_chunk, h, d)
+
+    q_pos = (jnp.arange(sq_p) + q_offset).reshape(nq, q_chunk)
+    k_pos = jnp.arange(skv_p).reshape(nk, kv_chunk)
+    kv_valid = (jnp.arange(skv_p) < skv0).reshape(nk, kv_chunk)
+
+    def q_step(_, qi):
+        qc = qg[:, qi]                              # (B, qc, H, D)
+        qpos = q_pos[qi]
+
+        @jax.checkpoint   # recompute P in backward: true flash-attention
+        def kv_step(carry, ki):                     # memory (no saved scores)
+            m, l, acc = carry
+            kc = kg[:, ki]                          # (B, kc, Hk, D)
+            vc = vg[:, ki]
+            s = _scores(qc, kc, g) * scale          # (B, H, qc, kc)
+            mask = kv_valid[ki][None, None, None, :]
+            if causal:
+                mask = mask & (k_pos[ki][None, None, None, :] <=
+                               qpos[None, None, :, None])
+            s = jnp.where(mask, s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            # guard rows with no valid keys yet
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(mask, p, 0.0)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = _pv(p.astype(p_dtype), vc, g)      # (B, H, qc, D)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, h, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, h, q_chunk, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.transpose(0, 2, 1, 3)      # (B, qc, H, D)
+
+    _, chunks = jax.lax.scan(q_step, None, jnp.arange(nq))
+    out = chunks.transpose(1, 0, 2, 3, 4).reshape(b, sq_p, h, d)
+    return out[:, :sq0].astype(q.dtype)
+
+
+def _scores(qc: jax.Array, kc: jax.Array, g: int) -> jax.Array:
+    """(B,qc,H,D) x (B,kc,Hk,D) -> (B,H,qc,kc) with GQA group expansion."""
+    b, qn, h, d = qc.shape
+    kn, hk = kc.shape[1], kc.shape[2]
+    qh = qc.reshape(b, qn, hk, g, d).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bnkd->bkgqn", qh, kc.astype(jnp.float32))
+    return s.reshape(b, h, qn, kn)
+
+
+def _pv(p: jax.Array, vc: jax.Array, g: int) -> jax.Array:
+    """(B,H,qc,kc) x (B,kc,Hk,D) -> (B,H,qc,D), f32 accumulation.
+
+    p may be bf16 (the TPU-flash convention: f32 softmax statistics, bf16
+    probabilities into the MXU) — §Perf 'bf16 P·V' iteration."""
+    b, h, qn, kn = p.shape
+    hk = h // g
+    pg = p.reshape(b, hk, g, qn, kn)
+    out = jnp.einsum("bkgqn,bnkd->bkgqd", pg, vc.astype(p.dtype),
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, h, qn, -1)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     q_positions: jax.Array, rules: ShardingRules = NO_RULES,
+                     p_dtype=jnp.float32) -> jax.Array:
+    """Attention of new tokens against a (possibly seq-sharded) KV cache.
+
+    q: (B, S, H, D); caches: (B, Smax, Hk, D); q_positions: (B, S) absolute
+    positions (causal mask: key index ≤ query position — the new tokens'
+    K/V must already be written into the cache).
+    Plain einsum + masked softmax: with the cache seq axis sharded over
+    'model', XLA lowers max/sum to the flash-decoding all-reduce pattern.
+    """
+    b, sq, h, d = q.shape
+    hk = k_cache.shape[2]
+    g = h // hk
+    s = _scores(q, k_cache, g)                       # (B, H, Sq, Smax)
+    s = s / math.sqrt(d)
+    k_idx = jnp.arange(k_cache.shape[1])
+    valid = k_idx[None, None, :] <= q_positions[:, :, None]   # (B, Sq, Smax)
+    s = jnp.where(valid[:, None, :, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = _pv(p.astype(p_dtype), v_cache, g)         # (B, H, Sq, D)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype) # (B, Sq, H, D)
+
+
+# ---------------------------------------------------------------------------
+# attention + MLP blocks (dense family)
+# ---------------------------------------------------------------------------
+
+def attn_params(key, cfg, dtype=jnp.float32):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, cfg.num_heads * hd, dtype),
+        "wk": dense_init(ks[1], d, cfg.num_kv_heads * hd, dtype),
+        "wv": dense_init(ks[2], d, cfg.num_kv_heads * hd, dtype),
+        "wo": dense_init(ks[3], cfg.num_heads * hd, d, dtype),
+        "norm": jnp.ones((d,), dtype),
+    }
+
+
+def mlp_params(key, cfg, dtype=jnp.float32, d_ff: Optional[int] = None):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"wu": dense_init(ks[0], d, f, dtype),
+         "wd": dense_init(ks[1], f, d, dtype),
+         "norm": jnp.ones((d,), dtype)}
+    if cfg.mlp_act == "silu":                        # gated
+        p["wg"] = dense_init(ks[2], d, f, dtype)
+    return p
+
+
+def attn_apply(p, x, cfg, rules: ShardingRules = NO_RULES, *,
+               positions=None, capture=None,
+               kv_cache=None, cache_pos=None, attn_chunk: int = 1024,
+               attn_p_dtype=jnp.float32):
+    """Pre-norm attention block (residual added by caller).
+
+    Returns (out, new_kv): new_kv is (k, v) of this call when kv_cache is
+    None (training / prefill cache fill) or the updated (k_cache, v_cache)
+    for decode. ``cache_pos`` is the scalar write position (uniform across
+    the batch — the serving convention; per-request offsets live in the
+    request manager, not the inner step).
+    """
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    h, hk = cfg.num_heads, cfg.num_kv_heads
+    xn = rmsnorm(x, p["norm"], cfg.norm_eps)
+    if capture is not None:
+        capture["attn_in"] = xn
+    q = (xn @ p["wq"]).reshape(b, s, h, hd)
+    k = (xn @ p["wk"]).reshape(b, s, hk, hd)
+    v = (xn @ p["wv"]).reshape(b, s, hk, hd)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = hint(q, rules, ("batch", None, "tp", None))
+    k = hint(k, rules, ("batch", None, None, None))
+
+    if kv_cache is None:
+        out = flash_attention(q, k, v, causal=True, q_chunk=attn_chunk,
+                              kv_chunk=attn_chunk, p_dtype=attn_p_dtype)
+        new_kv = (k, v)
+    else:
+        k_cache, v_cache = kv_cache                  # (B, Smax, Hk, D)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            k_cache, k.astype(k_cache.dtype), cache_pos, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            v_cache, v.astype(v_cache.dtype), cache_pos, axis=1)
+        if s > 1:
+            # prefill/chunked-prefill: flash attention over the new tokens
+            # (assumes cache_pos == 0 — the serving manager's convention);
+            # decode_attention here would materialize (B,H,S,Smax) scores.
+            out = flash_attention(q, k, v, causal=True, q_chunk=attn_chunk,
+                                  kv_chunk=attn_chunk, p_dtype=attn_p_dtype)
+        else:
+            out = decode_attention(q, k_cache, v_cache, positions, rules,
+                                   p_dtype=attn_p_dtype)
+        new_kv = (k_cache, v_cache)
+
+    out = hint(out, rules, ("batch", None, "tp", None))
+    if capture is not None:
+        capture["attn_out_in"] = out.reshape(b, s, h * hd)
+    y = out.reshape(b, s, h * hd) @ p["wo"]
+    return y.astype(x.dtype), new_kv
+
+
+def mlp_apply(p, x, cfg, rules: ShardingRules = NO_RULES, *, capture=None):
+    xn = rmsnorm(x, p["norm"], cfg.norm_eps)
+    if capture is not None:
+        capture["mlp_in"] = xn
+    if cfg.mlp_act == "silu":
+        hdn = mlp_act(xn @ p["wg"], "silu") * (xn @ p["wu"])
+    else:
+        hdn = mlp_act(xn @ p["wu"], cfg.mlp_act)
+    hdn = hint(hdn, rules, ("batch", None, "tp"))
+    if capture is not None:
+        capture["mlp_down_in"] = hdn
+    return (hdn @ p["wd"]).astype(x.dtype)
+
+
+__all__ = ["dense_init", "embed_init", "rmsnorm", "rope", "mlp_act",
+           "flash_attention", "decode_attention", "attn_params", "mlp_params",
+           "attn_apply", "mlp_apply"]

@@ -1,0 +1,283 @@
+"""Mamba-1 selective SSM ([ssm] falcon-mamba-7b).
+
+Training/prefill use a *chunked* selective scan: lax.scan over sequence
+chunks carrying the SSM state, with an inner associative_scan inside each
+chunk — O(L · d_inner · N) memory per chunk instead of per sequence, and the
+cross-chunk carry keeps the recurrence exact. Decode is the O(1) per-token
+recurrence (the reason this family runs the long_500k shape).
+
+d_inner is tensor-parallel: the recurrence is elementwise over d_inner so the
+scan itself is collective-free; only in/out projections communicate.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.sharding import ShardingRules, NO_RULES, hint
+
+
+def mamba_params(key, cfg: ModelConfig, dtype=jnp.float32):
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    dt_rank = max(1, math.ceil(d / 16))
+    ks = jax.random.split(key, 6)
+    # dt bias init so softplus(dt_bias) spans [1e-3, 1e-1] (mamba's init)
+    u = jax.random.uniform(ks[4], (di,), jnp.float32)
+    dt0 = jnp.exp(u * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+    dt_bias = dt0 + jnp.log(-jnp.expm1(-dt0))        # inverse softplus
+    return {
+        "norm": jnp.ones((d,), dtype),
+        "in_proj": L.dense_init(ks[0], d, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, di), jnp.float32)
+                   / math.sqrt(cfg.ssm_conv)).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": L.dense_init(ks[2], di, dt_rank + 2 * n, dtype),
+        "dt_proj": L.dense_init(ks[3], dt_rank, di, dtype),
+        "dt_bias": dt_bias.astype(dtype),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))).astype(dtype),
+        "D": jnp.ones((di,), dtype),
+        "out_proj": L.dense_init(ks[5], di, d, dtype),
+    }
+
+
+def mamba_logical_axes(cfg: ModelConfig):
+    return {"norm": (None, None),
+            "in_proj": (None, "fsdp", "tp"),
+            "conv_w": (None, None, "tp"),
+            "conv_b": (None, "tp"),
+            "x_proj": (None, "tp", None),
+            "dt_proj": (None, None, "tp"),
+            "dt_bias": (None, "tp"),
+            "A_log": (None, "tp", None),
+            "D": (None, "tp"),
+            "out_proj": (None, "tp", "fsdp")}
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv via shifted adds. x: (B, L, di); w: (K, di)."""
+    k = w.shape[0]
+    y = x * w[-1]
+    for j in range(1, k):
+        y = y + jnp.pad(x, ((0, 0), (j, 0), (0, 0)))[:, :-j] * w[k - 1 - j]
+    return y + b
+
+
+def _ssm_coeffs(p, xc, cfg):
+    """xc: (B, L, di) post-conv. Returns a, bu, cc: the recurrence inputs."""
+    n = cfg.ssm_state
+    dt_rank = p["dt_proj"].shape[0]
+    x_dbl = xc @ p["x_proj"]                          # (B, L, R+2N)
+    dt = jax.nn.softplus(x_dbl[..., :dt_rank] @ p["dt_proj"] + p["dt_bias"])
+    bc = x_dbl[..., dt_rank:dt_rank + n]              # (B, L, N)
+    cc = x_dbl[..., dt_rank + n:]                     # (B, L, N)
+    a_mat = -jnp.exp(p["A_log"].astype(jnp.float32))  # (di, N)
+    dt = dt.astype(jnp.float32)                       # f32 recurrence state
+    a = jnp.exp(dt[..., None] * a_mat)                # (B, L, di, N)
+    bu = ((dt * xc.astype(jnp.float32))[..., None]
+          * bc.astype(jnp.float32)[:, :, None, :])    # (B, L, di, N)
+    return a, bu, cc
+
+
+def _chunk_scan(a, bu, h0, chunk: int):
+    """Exact selective scan via chunked associative scan.
+    a, bu: (B, L, di, N); h0: (B, di, N) → h: (B, L, di, N), h_last.
+    (Reference path; the fused memory-lean path is :func:`_mamba_scan_y`.)"""
+    b, l, di, n = a.shape
+    chunk = min(chunk, l)
+    pad = (-l) % chunk
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+        bu = jnp.pad(bu, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = a.shape[1] // chunk
+    ac = a.reshape(b, nc, chunk, di, n).transpose(1, 0, 2, 3, 4)
+    bc = bu.reshape(b, nc, chunk, di, n).transpose(1, 0, 2, 3, 4)
+
+    def op(e1, e2):
+        p1, s1 = e1
+        p2, s2 = e2
+        return p1 * p2, s1 * p2 + s2
+
+    def body(h, xs):
+        a_i, b_i = xs                                 # (B, chunk, di, N)
+        pref_p, pref_s = jax.lax.associative_scan(op, (a_i, b_i), axis=1)
+        h_all = pref_s + pref_p * h[:, None]
+        return h_all[:, -1], h_all
+
+    h_last, hs = jax.lax.scan(body, h0, (ac, bc))
+    hs = hs.transpose(1, 0, 2, 3, 4).reshape(b, nc * chunk, di, n)
+    return hs[:, :l], h_last
+
+
+def _mamba_scan_y(p, xc, cfg, h0, chunk: int):
+    """Memory-lean selective scan: the (B, L, di, N)-sized recurrence inputs
+    a/bu AND the state trajectory are built per-chunk *inside* the scan body
+    and contracted with C_t immediately, so only (B, chunk, di, N) is ever
+    resident (§Perf falcon-mamba iteration: 3×(B,L,di,N) → 3×/nc).
+    xc: (B, L, di) post-conv. Returns y: (B, L, di), h_last."""
+    b, l, di = xc.shape
+    n = cfg.ssm_state
+    chunk = min(chunk, l)
+    pad = (-l) % chunk
+    if pad:
+        xc = jnp.pad(xc, ((0, 0), (0, pad), (0, 0)))
+    nc = xc.shape[1] // chunk
+    xg = xc.reshape(b, nc, chunk, di).transpose(1, 0, 2, 3)
+
+    def op(e1, e2):
+        p1, s1 = e1
+        p2, s2 = e2
+        return p1 * p2, s1 * p2 + s2
+
+    @jax.checkpoint   # recompute coeffs+scan in bwd: residual = h carry only
+    def body(h, x_i):                                 # x_i: (B, chunk, di)
+        a_i, bu_i, cc_i = _ssm_coeffs(p, x_i, cfg)
+        pref_p, pref_s = jax.lax.associative_scan(op, (a_i, bu_i), axis=1)
+        h_all = pref_s + pref_p * h[:, None]
+        y_i = jnp.einsum("bldn,bln->bld", h_all, cc_i.astype(jnp.float32))
+        return h_all[:, -1], y_i
+
+    h_last, ys = jax.lax.scan(body, h0, xg)
+    y = ys.transpose(1, 0, 2, 3).reshape(b, nc * chunk, di)
+    return y[:, :l], h_last
+
+
+def mamba_apply(p, x, cfg: ModelConfig, rules: ShardingRules = NO_RULES, *,
+                capture=None, state=None, chunk: int = 256):
+    """Full-sequence Mamba-1 block (residual added by caller).
+
+    state: None for training; {"conv": (B,K-1,di), "ssm": (B,di,N)} for
+    decode/continuation — returns (y, new_state) in that case.
+    """
+    xn = L.rmsnorm(x, p["norm"], cfg.norm_eps)
+    if capture is not None:
+        capture["mamba_in"] = xn
+    xz = xn @ p["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)                 # (B, L, di) each
+    xs = hint(xs, rules, ("batch", None, "tp"))
+
+    if state is not None:
+        hist = jnp.concatenate([state["conv"].astype(xs.dtype), xs], axis=1)
+        new_conv = hist[:, -(cfg.ssm_conv - 1):]
+        k = p["conv_w"].shape[0]
+        xc = _causal_conv(hist, p["conv_w"], p["conv_b"])[:, k - 1:][:, -xs.shape[1]:]
+        xc = jax.nn.silu(xc)
+        y_ssm, h_last = _mamba_scan_y(p, xc, cfg, state["ssm"], chunk)
+        new_state = {"conv": new_conv, "ssm": h_last}
+    else:
+        xc = jax.nn.silu(_causal_conv(xs, p["conv_w"], p["conv_b"]))
+        h0 = jnp.zeros((x.shape[0], cfg.d_inner, cfg.ssm_state), jnp.float32)
+        y_ssm, _ = _mamba_scan_y(p, xc, cfg, h0, chunk)
+        new_state = None
+
+    y = y_ssm.astype(xc.dtype) + p["D"] * xc
+    y = y * jax.nn.silu(z)
+    if capture is not None:
+        capture["mamba_out_in"] = y
+    out = (y @ p["out_proj"]).astype(x.dtype)
+    return out, new_state
+
+
+@dataclasses.dataclass
+class MambaModel(T.DenseModel):
+    """Attention-free Mamba-1 LM (falcon-mamba-7b)."""
+    scan_chunk: int = 256
+
+    def init(self, key):
+        cfg = self.cfg
+        k_emb, k_blk, k_head = jax.random.split(key, 3)
+        blocks = jax.vmap(lambda k: mamba_params(k, cfg, self.param_dtype))(
+            jax.random.split(k_blk, cfg.num_layers))
+        params = {"embed": L.embed_init(k_emb, cfg.padded_vocab, cfg.d_model,
+                                        self.param_dtype),
+                  "blocks": blocks,
+                  "final_norm": jnp.ones((cfg.d_model,), self.param_dtype)}
+        if not cfg.tie_embeddings:
+            params["lm_head"] = L.dense_init(k_head, cfg.d_model,
+                                             cfg.padded_vocab, self.param_dtype)
+        return params
+
+    def param_logical_axes(self):
+        ax = {"embed": (None, "tp"), "final_norm": (None,),
+              "blocks": mamba_logical_axes(self.cfg)}
+        if not self.cfg.tie_embeddings:
+            ax["lm_head"] = ("fsdp", "tp")
+        return ax
+
+    def _block_scan(self, params, h, positions):
+        cfg, rules = self.cfg, self.rules
+        chunk = h.shape[1] if self.unroll else self.scan_chunk
+        def body(carry, layer_p):
+            y, _ = mamba_apply(layer_p, carry, cfg, rules, chunk=chunk)
+            # carry sharded on d_model, NOT seq: the selective scan's time
+            # axis must stay local (sharded seq ⇒ serialized cross-device
+            # recurrence); channels are elementwise ⇒ free to shard
+            return hint(carry + y, rules, ("batch", None, "tp")), None
+        if self.unroll:
+            for i in range(cfg.num_layers):
+                h, _ = body(h, self.block_slice(params, i))
+            return h
+        body_fn = jax.checkpoint(body) if self.remat else body
+        h, _ = jax.lax.scan(body_fn, h, params["blocks"])
+        return h
+
+    # -- serving: recurrent state cache -------------------------------------
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        conv = jnp.zeros((cfg.num_layers, batch, cfg.ssm_conv - 1,
+                          cfg.d_inner), dtype)
+        ssm = jnp.zeros((cfg.num_layers, batch, cfg.d_inner, cfg.ssm_state),
+                        jnp.float32)
+        conv = hint(conv, self.rules, (None, "batch", None, "tp"))
+        ssm = hint(ssm, self.rules, (None, "batch", "tp", None))
+        return {"conv": conv, "ssm": ssm, "pos": jnp.zeros((), jnp.int32)}
+
+    def cache_logical_axes(self):
+        return {"conv": (None, "batch", None, "tp"),
+                "ssm": (None, "batch", "tp", None),
+                "pos": ()}
+
+    def _cached_scan(self, params, h, cache, positions):
+        cfg, rules = self.cfg, self.rules
+        chunk = max(h.shape[1], 1) if self.unroll else self.scan_chunk
+        def body(x, scanned):
+            layer_p, conv, ssm = scanned
+            y, st = mamba_apply(layer_p, x, cfg, rules, chunk=chunk,
+                                state={"conv": conv, "ssm": ssm})
+            return x + y, (st["conv"], st["ssm"])
+        if self.unroll:
+            cs, ss = [], []
+            for i in range(cfg.num_layers):
+                h, (cv, sv) = body(h, (self.block_slice(params, i),
+                                       cache["conv"][i], cache["ssm"][i]))
+                cs.append(cv)
+                ss.append(sv)
+            conv_new, ssm_new = jnp.stack(cs), jnp.stack(ss)
+        else:
+            h, (conv_new, ssm_new) = jax.lax.scan(
+                body, h, (params["blocks"], cache["conv"], cache["ssm"]))
+        return h, {"conv": conv_new, "ssm": ssm_new,
+                   "pos": cache["pos"] + positions.shape[1]}
+
+    def block_linears(self, i):
+        return [
+            ("in_proj", ("blocks", "in_proj"), "mamba_in"),
+            ("out_proj", ("blocks", "out_proj"), "mamba_out_in"),
+        ]
+
+    def block_apply_one(self, params, i, h, *, capture=False):
+        bp = self.block_slice(params, i)
+        cap = {} if capture else None
+        y, _ = mamba_apply(bp, h, self.cfg, self.rules, capture=cap,
+                           chunk=self.scan_chunk)
+        return h + y, (cap or {})
+
+
+__all__ = ["mamba_params", "mamba_logical_axes", "mamba_apply", "MambaModel"]

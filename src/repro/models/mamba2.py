@@ -1,0 +1,313 @@
+"""Mamba-2 (SSD) blocks + the Zamba2 hybrid model ([hybrid] zamba2-1.2b).
+
+SSD uses scalar-per-head decay, which turns the selective scan into the
+chunked *matmul* algorithm (intra-chunk attention-like matmuls + a cheap
+inter-chunk recurrence) — MXU-friendly, unlike Mamba-1's elementwise scan.
+
+Zamba2 = stacked Mamba-2 blocks with ONE shared attention+MLP block
+re-invoked every ``attn_every`` blocks (weights shared across call sites;
+DESIGN.md §5 notes the simplifications vs. the exact Zamba2 wiring).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.mamba import _causal_conv
+from repro.sharding import ShardingRules, NO_RULES, hint
+
+
+def mamba2_params(key, cfg: ModelConfig, dtype=jnp.float32):
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    nh = di // cfg.ssm_head_dim
+    ks = jax.random.split(key, 7)
+    u = jax.random.uniform(ks[5], (nh,), jnp.float32)
+    dt0 = jnp.exp(u * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+    dt_bias = dt0 + jnp.log(-jnp.expm1(-dt0))
+    return {
+        "norm": jnp.ones((d,), dtype),
+        "wz": L.dense_init(ks[0], d, di, dtype),
+        "wx": L.dense_init(ks[1], d, di, dtype),
+        "wbc": L.dense_init(ks[2], d, 2 * n, dtype),
+        "wdt": L.dense_init(ks[3], d, nh, dtype),
+        "dt_bias": dt_bias.astype(dtype),
+        "conv_w": (jax.random.normal(ks[4], (cfg.ssm_conv, di), jnp.float32)
+                   / math.sqrt(cfg.ssm_conv)).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "A_log": jnp.zeros((nh,), dtype),
+        "D": jnp.ones((nh,), dtype),
+        "out_norm": jnp.ones((di,), dtype),
+        "out_proj": L.dense_init(ks[6], di, d, dtype),
+    }
+
+
+def mamba2_logical_axes(cfg: ModelConfig):
+    return {"norm": (None, None), "wz": (None, "fsdp", "tp"),
+            "wx": (None, "fsdp", "tp"), "wbc": (None, "fsdp", None),
+            "wdt": (None, "fsdp", None), "dt_bias": (None, None),
+            "conv_w": (None, None, "tp"), "conv_b": (None, "tp"),
+            "A_log": (None, None), "D": (None, None),
+            "out_norm": (None, "tp"), "out_proj": (None, "tp", "fsdp")}
+
+
+def _ssd_chunked(xh, dtv, a_log, bc, cc, h0, chunk: int):
+    """Chunked SSD. xh: (B,L,nh,hd); dtv,a_log: (B,L,nh); bc,cc: (B,L,N).
+    h0: (B,nh,hd,N). Returns y (B,L,nh,hd), h_last."""
+    b, l, nh, hd = xh.shape
+    n = bc.shape[-1]
+    chunk = min(chunk, l)
+    pad = (-l) % chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dtv = jnp.pad(dtv, ((0, 0), (0, pad), (0, 0)))
+        a_log = jnp.pad(a_log, ((0, 0), (0, pad), (0, 0)))
+        bc = jnp.pad(bc, ((0, 0), (0, pad), (0, 0)))
+        cc = jnp.pad(cc, ((0, 0), (0, pad), (0, 0)))
+    nc = xh.shape[1] // chunk
+    xg = xh.reshape(b, nc, chunk, nh, hd)
+    dg = dtv.reshape(b, nc, chunk, nh)
+    ag = a_log.reshape(b, nc, chunk, nh)
+    bg = bc.reshape(b, nc, chunk, n)
+    cg = cc.reshape(b, nc, chunk, n)
+
+    la = jnp.cumsum(ag, axis=2)                        # (B,nc,cl,nh)
+    # intra-chunk: decay matrix per head, causal
+    seg = la[:, :, :, None, :] - la[:, :, None, :, :]  # (B,nc,t,s,nh)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    lmat = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bctn,bcsn->bcts", cg, bg)     # (B,nc,t,s)
+    m = scores[..., None] * lmat * dg[:, :, None, :, :]
+    y_intra = jnp.einsum("bctsh,bcshp->bcthp", m, xg)
+
+    # chunk states: S_c = Σ_s exp(la_end - la_s)·dt_s·(x_s ⊗ B_s)
+    decay_end = jnp.exp(la[:, :, -1:, :] - la)         # (B,nc,cl,nh)
+    s_c = jnp.einsum("bcsh,bcsn,bcshp->bchpn", decay_end * dg, bg, xg)
+
+    # inter-chunk recurrence over nc
+    chunk_decay = jnp.exp(la[:, :, -1, :])             # (B,nc,nh)
+    def body(h, xs):
+        dcy, s = xs                                    # (B,nh), (B,nh,hd,N)
+        h_new = h * dcy[:, :, None, None] + s
+        return h_new, h                                # emit state BEFORE chunk
+    h_last, h_prev = jax.lax.scan(
+        body, h0, (chunk_decay.transpose(1, 0, 2), s_c.transpose(1, 0, 2, 3, 4)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)           # (B,nc,nh,hd,N)
+
+    y_inter = jnp.einsum("bcth,bctn,bchpn->bcthp",
+                         jnp.exp(la), cg, h_prev)
+    y = (y_intra + y_inter).reshape(b, nc * chunk, nh, hd)
+    return y[:, :l], h_last
+
+
+def mamba2_apply(p, x, cfg: ModelConfig, rules: ShardingRules = NO_RULES, *,
+                 capture=None, state=None, chunk: int = 128):
+    di, n = cfg.d_inner, cfg.ssm_state
+    nh = di // cfg.ssm_head_dim
+    hd = cfg.ssm_head_dim
+    xn = L.rmsnorm(x, p["norm"], cfg.norm_eps)
+    if capture is not None:
+        capture["mamba2_in"] = xn
+    z = xn @ p["wz"]
+    xs = xn @ p["wx"]
+    xs = hint(xs, rules, ("batch", None, "tp"))
+    bc_all = xn @ p["wbc"]
+    bcv, ccv = bc_all[..., :n], bc_all[..., n:]
+    dtv = jax.nn.softplus(xn @ p["wdt"] + p["dt_bias"])   # (B,L,nh)
+    a_log = dtv * (-jnp.exp(p["A_log"].astype(jnp.float32)))
+
+    if state is not None:
+        hist = jnp.concatenate([state["conv"].astype(xs.dtype), xs], axis=1)
+        new_conv = hist[:, -(cfg.ssm_conv - 1):]
+        k = p["conv_w"].shape[0]
+        xc = _causal_conv(hist, p["conv_w"], p["conv_b"])[:, k - 1:][:, -xs.shape[1]:]
+        h0 = state["ssm"]
+    else:
+        xc = _causal_conv(xs, p["conv_w"], p["conv_b"])
+        h0 = jnp.zeros((x.shape[0], nh, hd, n), jnp.float32)
+        new_conv = None
+    xc = jax.nn.silu(xc)
+    xh = xc.reshape(*xc.shape[:2], nh, hd)
+    y, h_last = _ssd_chunked(xh, dtv, a_log, bcv, ccv, h0, chunk)
+    y = y + p["D"][None, None, :, None] * xh
+    y = y.reshape(*x.shape[:2], di)
+    # gated RMSNorm (mamba2's norm-before-out-proj)
+    y = L.rmsnorm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+    if capture is not None:
+        capture["mamba2_out_in"] = y
+    out = (y @ p["out_proj"]).astype(x.dtype)
+    new_state = None if state is None else {"conv": new_conv, "ssm": h_last}
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# Zamba2 hybrid model
+# ---------------------------------------------------------------------------
+
+def _shared_positions(cfg: ModelConfig):
+    """Mamba-block indices before which the shared attn block is invoked."""
+    return [i for i in range(cfg.num_layers) if i % cfg.attn_every == 0]
+
+
+@dataclasses.dataclass
+class Zamba2Model(T.DenseModel):
+    """Mamba-2 backbone + one shared attention+MLP block (zamba2-1.2b)."""
+    scan_chunk: int = 128
+
+    def init(self, key):
+        cfg = self.cfg
+        k_emb, k_blk, k_sh, k_head = jax.random.split(key, 4)
+        blocks = jax.vmap(lambda k: mamba2_params(k, cfg, self.param_dtype))(
+            jax.random.split(k_blk, cfg.num_layers))
+        params = {"embed": L.embed_init(k_emb, cfg.padded_vocab, cfg.d_model,
+                                        self.param_dtype),
+                  "blocks": blocks,
+                  "shared": T.block_params(k_sh, cfg, self.param_dtype),
+                  "final_norm": jnp.ones((cfg.d_model,), self.param_dtype)}
+        if not cfg.tie_embeddings:
+            params["lm_head"] = L.dense_init(k_head, cfg.d_model,
+                                             cfg.padded_vocab, self.param_dtype)
+        return params
+
+    def param_logical_axes(self):
+        dense_ax = T.DenseModel(self.cfg).param_logical_axes()
+        shared = {k: v[1:] for k, v in
+                  dense_ax["blocks"]["attn"].items()}   # unstacked
+        shared_mlp = {k: v[1:] for k, v in dense_ax["blocks"]["mlp"].items()}
+        ax = {"embed": (None, "tp"), "final_norm": (None,),
+              "blocks": mamba2_logical_axes(self.cfg),
+              "shared": {"attn": shared, "mlp": shared_mlp}}
+        if not self.cfg.tie_embeddings:
+            ax["lm_head"] = ("fsdp", "tp")
+        return ax
+
+    def _groups(self):
+        cfg = self.cfg
+        pos = _shared_positions(cfg) + [cfg.num_layers]
+        return [(pos[i], pos[i + 1]) for i in range(len(pos) - 1)]
+
+    def _block_scan(self, params, h, positions):
+        cfg, rules = self.cfg, self.rules
+        chunk = h.shape[1] if self.unroll else self.scan_chunk
+        def mamba_body(carry, layer_p):
+            y, _ = mamba2_apply(layer_p, carry, cfg, rules, chunk=chunk)
+            # d_model-sharded carry; seq stays local (see mamba.py note)
+            return hint(carry + y, rules, ("batch", None, "tp")), None
+        body_fn = jax.checkpoint(mamba_body) if self.remat else mamba_body
+        for lo, hi in self._groups():
+            h, _ = T.block_apply(params["shared"], h, cfg, rules,
+                                 positions=positions,
+                                 attn_chunk=self.attn_chunk,
+                                 attn_p_dtype=self.attn_p_dtype)
+            h = hint(h, rules, ("batch", None, "tp"))
+            if self.unroll:
+                for i in range(lo, hi):
+                    h, _ = mamba_body(h, self.block_slice(params, i))
+            else:
+                group = jax.tree.map(lambda x: x[lo:hi], params["blocks"])
+                h, _ = jax.lax.scan(body_fn, h, group)
+        return h
+
+    # -- serving --------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        nh = cfg.d_inner // cfg.ssm_head_dim
+        n_shared = len(_shared_positions(cfg))
+        conv = jnp.zeros((cfg.num_layers, batch, cfg.ssm_conv - 1,
+                          cfg.d_inner), dtype)
+        ssm = jnp.zeros((cfg.num_layers, batch, nh, cfg.ssm_head_dim,
+                         cfg.ssm_state), jnp.float32)
+        kv = jnp.zeros((n_shared, batch, max_len, cfg.num_kv_heads,
+                        cfg.resolved_head_dim), dtype)
+        kv = hint(kv, self.rules, (None, "batch", "seq_kv", None, None))
+        return {"conv": conv, "ssm": ssm, "k": kv, "v": kv,
+                "pos": jnp.zeros((), jnp.int32)}
+
+    def cache_logical_axes(self):
+        return {"conv": (None, "batch", None, "tp"),
+                "ssm": (None, "batch", None, None, None),
+                "k": (None, "batch", "seq_kv", None, None),
+                "v": (None, "batch", "seq_kv", None, None),
+                "pos": ()}
+
+    def _cached_scan(self, params, h, cache, positions):
+        cfg, rules = self.cfg, self.rules
+        chunk = max(h.shape[1], 1) if self.unroll else self.scan_chunk
+        def mamba_body(x, scanned):
+            layer_p, conv, ssm = scanned
+            y, st = mamba2_apply(layer_p, x, cfg, rules, chunk=chunk,
+                                 state={"conv": conv, "ssm": ssm})
+            return x + y, (st["conv"], st["ssm"])
+        conv_new = jnp.zeros_like(cache["conv"])
+        ssm_new = jnp.zeros_like(cache["ssm"])
+        k_new = cache["k"]
+        v_new = cache["v"]
+        for gi, (lo, hi) in enumerate(self._groups()):
+            h, (kc, vc) = T.block_apply(params["shared"], h, cfg, rules,
+                                        positions=positions,
+                                        kv_cache=(cache["k"][gi], cache["v"][gi]),
+                                        cache_pos=cache["pos"],
+                                        attn_chunk=self.attn_chunk,
+                                        attn_p_dtype=self.attn_p_dtype)
+            k_new = k_new.at[gi].set(kc)
+            v_new = v_new.at[gi].set(vc)
+            if self.unroll:
+                cs, ss = [], []
+                for i in range(lo, hi):
+                    h, (cv1, sv1) = mamba_body(
+                        h, (self.block_slice(params, i),
+                            cache["conv"][i], cache["ssm"][i]))
+                    cs.append(cv1)
+                    ss.append(sv1)
+                cv, sv = jnp.stack(cs), jnp.stack(ss)
+            else:
+                group = jax.tree.map(lambda x: x[lo:hi], params["blocks"])
+                h, (cv, sv) = jax.lax.scan(
+                    mamba_body, h, (group, cache["conv"][lo:hi], cache["ssm"][lo:hi]))
+            conv_new = jax.lax.dynamic_update_slice_in_dim(conv_new, cv, lo, 0)
+            ssm_new = jax.lax.dynamic_update_slice_in_dim(ssm_new, sv, lo, 0)
+        return h, {"conv": conv_new, "ssm": ssm_new, "k": k_new, "v": v_new,
+                   "pos": cache["pos"] + positions.shape[1]}
+
+    # -- compression protocol: mamba blocks + the shared block (id = L) -----
+    def num_blocks(self):
+        return self.cfg.num_layers + 1     # + shared block (compressed once)
+
+    def block_apply_one(self, params, i, h, *, capture=False):
+        cfg = self.cfg
+        cap = {} if capture else None
+        if i == cfg.num_layers:            # shared attn+mlp block
+            b, s = h.shape[0], h.shape[1]
+            positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+            out, _ = T.block_apply(params["shared"], h, cfg, self.rules,
+                                   positions=positions, capture=cap)
+            return out, (cap or {})
+        bp = self.block_slice(params, i)
+        y, _ = mamba2_apply(bp, h, cfg, self.rules, capture=cap,
+                            chunk=self.scan_chunk)
+        return h + y, (cap or {})
+
+    def block_linears(self, i):
+        if i == self.cfg.num_layers:
+            specs = [("wq", ("shared", "attn", "wq"), "attn_in"),
+                     ("wk", ("shared", "attn", "wk"), "attn_in"),
+                     ("wv", ("shared", "attn", "wv"), "attn_in"),
+                     ("wo", ("shared", "attn", "wo"), "attn_out_in"),
+                     ("wu", ("shared", "mlp", "wu"), "mlp_in"),
+                     ("wd", ("shared", "mlp", "wd"), "mlp_down_in")]
+            if self.cfg.mlp_act == "silu":
+                specs.insert(4, ("wg", ("shared", "mlp", "wg"), "mlp_in"))
+            return specs
+        return [("wz", ("blocks", "wz"), "mamba2_in"),
+                ("wx", ("blocks", "wx"), "mamba2_in"),
+                ("out_proj", ("blocks", "out_proj"), "mamba2_out_in")]
+
+
+__all__ = ["mamba2_params", "mamba2_logical_axes", "mamba2_apply",
+           "Zamba2Model"]

@@ -1,0 +1,67 @@
+"""Model registry: config → model instance, plus dry-run input specs.
+
+``input_specs(cfg, shape, ...)`` returns jax.ShapeDtypeStruct stand-ins for
+every model input (and param/cache trees on request) so the launcher can
+``jit(...).lower(...)`` with zero allocation — the multi-pod dry-run pattern.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.transformer import DenseModel
+from repro.models.moe import MoEModel
+from repro.models.mamba import MambaModel
+from repro.models.mamba2 import Zamba2Model
+from repro.sharding import ShardingRules, NO_RULES
+
+_FAMILY = {
+    "dense": DenseModel,
+    "audio": DenseModel,
+    "vlm": DenseModel,
+    "moe": MoEModel,
+    "ssm": MambaModel,
+    "hybrid": Zamba2Model,
+}
+
+
+def build_model(cfg: ModelConfig, rules: ShardingRules = NO_RULES,
+                param_dtype=jnp.float32, remat: bool = True):
+    cls = _FAMILY[cfg.family]
+    return cls(cfg=cfg, rules=rules, param_dtype=param_dtype, remat=remat)
+
+
+def batch_specs(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, Any]:
+    """ShapeDtypeStructs for one input batch (tokens + frontend stubs)."""
+    sds = jax.ShapeDtypeStruct
+    if cfg.frontend == "audio_frames":
+        return {"frames": sds((batch, seq, cfg.d_model), jnp.bfloat16),
+                "labels": sds((batch, seq), jnp.int32)}
+    out = {"tokens": sds((batch, seq), jnp.int32),
+           "labels": sds((batch, seq), jnp.int32)}
+    if cfg.frontend == "vision_patches":
+        text = max(seq - cfg.num_patches, 1)
+        out = {"tokens": sds((batch, text), jnp.int32),
+               "patches": sds((batch, cfg.num_patches, cfg.d_model),
+                              jnp.bfloat16),
+               "labels": sds((batch, text), jnp.int32)}
+    return out
+
+
+def make_batch(cfg: ModelConfig, key, batch: int, seq: int) -> Dict[str, Any]:
+    """Concrete random batch matching batch_specs (for smoke tests)."""
+    ks = jax.random.split(key, 3)
+    specs = batch_specs(cfg, batch, seq)
+    out = {}
+    for name, s in specs.items():
+        if s.dtype == jnp.int32:
+            out[name] = jax.random.randint(ks[0], s.shape, 0, cfg.vocab_size)
+        else:
+            out[name] = jax.random.normal(ks[1], s.shape, jnp.float32).astype(s.dtype)
+    return out
+
+
+__all__ = ["build_model", "batch_specs", "make_batch"]

@@ -1,0 +1,6 @@
+from repro.optim.optimizers import (OptimizerConfig, make_optimizer, adamw_init,
+                                    adamw_update, adafactor_init,
+                                    adafactor_update, lr_schedule)
+
+__all__ = ["OptimizerConfig", "make_optimizer", "adamw_init", "adamw_update",
+           "adafactor_init", "adafactor_update", "lr_schedule"]

@@ -1,0 +1,176 @@
+"""Optimizers from scratch (no optax): AdamW and Adafactor.
+
+AdamW      — full m/v states (small / medium models).
+Adafactor  — factored second moments for ≥2D leaves (row/col RMS), O(n+m)
+             state instead of O(n·m): the memory-fitting choice for the
+             340B-class dry-run configs (DESIGN.md §4).
+Both return (new_params, new_state); all state is a pytree mirroring params
+so it checkpoints/shards with the same logical-axis rules as the params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Literal
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: Literal["adamw", "adafactor"] = "adamw"
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    weight_decay: float = 0.01
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    clip_norm: float = 1.0
+    min_lr_frac: float = 0.1
+
+
+def lr_schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup → cosine decay to min_lr_frac·lr."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree) -> jax.Array:
+    sq = jax.tree.reduce(
+        lambda a, x: a + jnp.sum(jnp.square(x.astype(jnp.float32))), tree, 0.0)
+    return jnp.sqrt(sq)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gn
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params):
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {"m": zeros, "v": jax.tree.map(jnp.copy, zeros),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _layerwise(fn, *trees):
+    """Apply fn to aligned leaf tuples; for layer-stacked leaves (ndim ≥ 3)
+    scan over the leading axis so the f32 temporaries are one layer's worth,
+    not the whole stack (the 340B-class memory fix — EXPERIMENTS.md §Perf)."""
+    def leaf(*xs):
+        p = xs[-1]
+        if p.ndim >= 3:
+            return jax.lax.map(lambda sl: fn(*sl), xs)
+        return fn(*xs)
+    return jax.tree.map(leaf, *trees)
+
+
+def adamw_update(grads, state, params, cfg: OptimizerConfig):
+    step = state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    grads, gn = clip_by_global_norm(grads, cfg.clip_norm)
+    b1, b2 = cfg.b1, cfg.b2
+    t = step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * g * g
+        mhat = m2 / (1 - b1 ** t)
+        vhat = v2 / (1 - b2 ** t)
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+    out = _layerwise(upd, grads, state["m"], state["v"], params)
+    new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v, "step": step}, \
+        {"lr": lr, "grad_norm": gn}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored v for ≥2D, momentum-free)
+# ---------------------------------------------------------------------------
+
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def adafactor_init(params):
+    def leaf(p):
+        if _factored(p):
+            # factor over the last two dims; leading dims (layer stack) kept
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"v": jax.tree.map(leaf, params,
+                              is_leaf=lambda x: isinstance(x, jax.Array)),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(grads, state, params, cfg: OptimizerConfig):
+    step = state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    grads, gn = clip_by_global_norm(grads, cfg.clip_norm)
+    decay = 1.0 - step.astype(jnp.float32) ** -0.8     # adafactor beta2 schedule
+
+    def upd(g, v, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + 1e-30
+        if _factored(p):
+            vr = decay * v["vr"] + (1 - decay) * g2.mean(axis=-1)
+            vc = decay * v["vc"] + (1 - decay) * g2.mean(axis=-2)
+            denom = vr.mean(axis=-1, keepdims=True)[..., None]
+            vhat = (vr[..., None] * vc[..., None, :]) / jnp.maximum(denom, 1e-30)
+            new_v = {"vr": vr, "vc": vc}
+        else:
+            vhat = decay * v["v"] + (1 - decay) * g2
+            new_v = {"v": vhat}
+        update = g / jnp.sqrt(vhat + cfg.eps)
+        # relative step clipping (adafactor d=1.0)
+        rms = jnp.sqrt(jnp.mean(update * update))
+        update = update / jnp.maximum(1.0, rms)
+        new_p = (p.astype(jnp.float32) - lr * update
+                 - lr * cfg.weight_decay * p.astype(jnp.float32)).astype(p.dtype)
+        return new_p, new_v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_v = treedef.flatten_up_to(state["v"])
+    new_p, new_v = [], []
+    for g, v, p in zip(flat_g, flat_v, flat_p):
+        if p.ndim >= 3:
+            # scan the update over the layer stack: one layer of f32
+            # temporaries at a time (340B-class memory fix, §Perf)
+            np_, nv_ = jax.lax.map(lambda sl: upd(*sl), (g, v, p))
+        else:
+            np_, nv_ = upd(g, v, p)
+        new_p.append(np_)
+        new_v.append(nv_)
+    return (jax.tree.unflatten(treedef, new_p),
+            {"v": jax.tree.unflatten(treedef, new_v), "step": step},
+            {"lr": lr, "grad_norm": gn})
+
+
+def make_optimizer(cfg: OptimizerConfig):
+    if cfg.name == "adamw":
+        return adamw_init, lambda g, s, p: adamw_update(g, s, p, cfg)
+    if cfg.name == "adafactor":
+        return adafactor_init, lambda g, s, p: adafactor_update(g, s, p, cfg)
+    raise ValueError(cfg.name)
+
+
+__all__ = ["OptimizerConfig", "make_optimizer", "adamw_init", "adamw_update",
+           "adafactor_init", "adafactor_update", "lr_schedule", "global_norm",
+           "clip_by_global_norm"]

@@ -1,0 +1,3 @@
+from repro.quant.qtensor import QTensor, pack_int4, unpack_int4
+
+__all__ = ["QTensor", "pack_int4", "unpack_int4"]

@@ -1,0 +1,70 @@
+"""Packed quantized-weight storage — the serving payoff of compression.
+
+``QTensor`` stores AWP/RTN/AWQ-quantized weights as packed integers
+(int4 → two nibbles per uint8) + per-(row, group) scale/zero, a 4-8× memory
+saving that decode-shape serving reads instead of the dense weight. The
+fused dequant-matmul lives in ``repro.kernels.dequant_matmul`` (Pallas);
+``QTensor.dequant()`` is its reference.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import projections as proj
+
+
+def pack_int4(q: jax.Array) -> jax.Array:
+    """(…, n) int codes in [0,15] → (…, n//2) uint8 (low nibble first)."""
+    assert q.shape[-1] % 2 == 0
+    q = q.astype(jnp.uint8)
+    lo = q[..., 0::2]
+    hi = q[..., 1::2]
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_int4(packed: jax.Array) -> jax.Array:
+    lo = packed & 0xF
+    hi = packed >> 4
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(*packed.shape[:-1], packed.shape[-1] * 2)
+
+
+class QTensor(NamedTuple):
+    """Quantized (d_out, d_in) weight, paper orientation."""
+    packed: jax.Array      # (d_out, d_in//2) uint8 for bits=4; int8 codes else
+    scale: jax.Array       # (d_out, n_groups) f32
+    zero: jax.Array        # (d_out, n_groups) f32
+    bits: int
+    group_size: int
+    shape: tuple           # logical (d_out, d_in)
+
+    @staticmethod
+    def from_dense(w: jax.Array, bits: int = 4, group_size: int = 128) -> "QTensor":
+        qp = proj.quant_params(w, bits, group_size)
+        codes = qp.q.reshape(w.shape[0], -1)           # (d_out, d_in)
+        packed = pack_int4(codes) if bits == 4 else codes.astype(jnp.int8)
+        return QTensor(packed=packed, scale=qp.scale[..., 0], zero=qp.zero[..., 0],
+                       bits=bits, group_size=group_size, shape=tuple(w.shape))
+
+    def dequant(self, dtype=jnp.float32) -> jax.Array:
+        d_out, d_in = self.shape
+        codes = (unpack_int4(self.packed) if self.bits == 4
+                 else self.packed).astype(jnp.float32)
+        g = codes.reshape(d_out, -1, self.group_size)
+        deq = (g - self.zero[..., None]) * self.scale[..., None]
+        return deq.reshape(d_out, d_in).astype(dtype)
+
+    def matmul(self, x: jax.Array) -> jax.Array:
+        """x @ Wᵀ with on-the-fly dequant (reference; kernel in kernels/)."""
+        return x @ self.dequant(x.dtype).T
+
+    def nbytes(self) -> int:
+        n = self.packed.size * self.packed.dtype.itemsize
+        n += self.scale.size * 4 + self.zero.size * 4
+        return n
+
+
+__all__ = ["QTensor", "pack_int4", "unpack_int4"]

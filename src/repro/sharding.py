@@ -1,0 +1,159 @@
+"""Named-axis sharding rules: logical tensor axes → mesh PartitionSpecs.
+
+Every tensor in the system is annotated with *logical* axis names; this module
+maps them onto the physical mesh (``pod × data × model`` multi-pod, or
+``data × model`` single-pod). The mapping is adaptive: a logical axis is only
+sharded if its size divides the mesh axis size (e.g. starcoder2-7b's 36 heads
+do not divide model=16, so heads fall back to replicated and the MLP carries
+the tensor-parallelism — see DESIGN.md §4).
+
+Conventions
+-----------
+logical axes:
+  "batch"    — data-parallel batch          → ("pod", "data")
+  "fsdp"     — parameter FSDP dim           → ("pod", "data")
+  "tp"       — tensor-parallel dim (heads / d_ff / experts / vocab) → "model"
+  "seq_kv"   — KV-cache sequence dim for decode (flash-decoding)    → "model"
+  "rows"     — AWP row-parallel d_out dim   → all axes (whole mesh)
+  None       — replicated
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Physical meaning of each logical axis for a given mesh (None = single
+    device / no constraint mode)."""
+    mesh: Optional[Mesh] = None
+    batch_axes: tuple = ("data",)       # ("pod","data") on multi-pod
+    tp_axis: Optional[str] = "model"
+    fsdp_axes: tuple = ("data",)
+    rows_axes: tuple = ("data", "model")
+
+    @staticmethod
+    def for_mesh(mesh: Optional[Mesh]) -> "ShardingRules":
+        if mesh is None:
+            return ShardingRules(mesh=None)
+        names = mesh.axis_names
+        batch = tuple(n for n in ("pod", "data") if n in names)
+        tp = "model" if "model" in names else None
+        rows = tuple(n for n in ("pod", "data", "model") if n in names)
+        return ShardingRules(mesh=mesh, batch_axes=batch or ("data",),
+                             tp_axis=tp, fsdp_axes=batch or ("data",),
+                             rows_axes=rows)
+
+    # -- helpers ----------------------------------------------------------
+    def axis_size(self, axes) -> int:
+        if self.mesh is None:
+            return 1
+        if isinstance(axes, str):
+            axes = (axes,)
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    def _resolve(self, logical: Optional[str], dim: int):
+        """Logical name -> mesh axes, or None when not shardable/divisible."""
+        if logical is None or self.mesh is None:
+            return None
+        table = {
+            "batch": self.batch_axes,
+            "fsdp": self.fsdp_axes,
+            "tp": self.tp_axis,
+            "seq_kv": self.tp_axis,
+            "rows": self.rows_axes,
+        }
+        axes = table.get(logical)
+        if axes is None:
+            return None
+        size = self.axis_size(axes)
+        if size <= 1 or dim % size != 0:
+            return None                      # adaptive fallback: replicate
+        return axes
+
+    def spec(self, logical_axes: Sequence[Optional[str]], shape: Sequence[int]) -> P:
+        assert len(logical_axes) == len(shape), (logical_axes, shape)
+        entries, used = [], set()
+        for name, dim in zip(logical_axes, shape):
+            ax = self._resolve(name, dim)
+            # a mesh axis may appear at most once in a spec
+            if ax is not None:
+                flat = (ax,) if isinstance(ax, str) else tuple(ax)
+                if any(a in used for a in flat):
+                    ax = None
+                else:
+                    used.update(flat)
+            entries.append(ax)
+        return P(*entries)
+
+    def sharding(self, logical_axes, shape) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(logical_axes, shape))
+
+
+def rules_for_cell(mesh: Optional[Mesh], family: str, kind: str,
+                   global_batch: Optional[int] = None) -> ShardingRules:
+    """Family/step-specific physical mapping (DESIGN.md §4).
+
+    All families use batch over (pod, data) + TP over model. For SSM/hybrid
+    the *models* keep the sequence axis unsharded (a sharded sequential scan
+    serializes across devices) and carry TP on d_model/d_inner instead —
+    the recurrence is elementwise across channels (see mamba.py hints).
+    """
+    return ShardingRules.for_mesh(mesh)
+
+
+def tree_specs(rules: ShardingRules, logical_tree, shape_tree):
+    """Mirror-walk a logical-axes tree against a ShapeDtypeStruct tree and
+    produce PartitionSpecs (dicts of dicts; leaves are tuples of axis names)."""
+    if isinstance(logical_tree, dict):
+        return {k: tree_specs(rules, logical_tree[k], shape_tree[k])
+                for k in logical_tree}
+    return rules.spec(logical_tree, shape_tree.shape)
+
+
+def tree_shardings(rules: ShardingRules, logical_tree, shape_tree):
+    if rules.mesh is None:
+        return None
+    specs = tree_specs(rules, logical_tree, shape_tree)
+    return jax.tree.map(lambda s: NamedSharding(rules.mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_logical_axes(opt_name: str, param_logical, param_shapes):
+    """Logical axes for optimizer state mirroring the params tree."""
+    if opt_name == "adamw":
+        return {"m": param_logical, "v": param_logical, "step": ()}
+
+    def leaf(log, shape):
+        if len(shape.shape) >= 2:
+            return {"vr": tuple(log[:-1]), "vc": tuple(log[:-2]) + (log[-1],)}
+        return {"v": tuple(log)}
+
+    def rec(log, shp):
+        if isinstance(log, dict):
+            return {k: rec(log[k], shp[k]) for k in log}
+        return leaf(log, shp)
+
+    return {"v": rec(param_logical, param_shapes), "step": ()}
+
+
+def hint(x: jax.Array, rules: ShardingRules, logical_axes) -> jax.Array:
+    """with_sharding_constraint if a mesh is active, identity otherwise."""
+    if rules is None or rules.mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, rules.spec(logical_axes, x.shape)))
+
+
+NO_RULES = ShardingRules(mesh=None)
+
+__all__ = ["ShardingRules", "hint", "NO_RULES", "P"]

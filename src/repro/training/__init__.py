@@ -1,0 +1,3 @@
+from repro.training.train_loop import TrainConfig, make_train_step, init_train_state
+
+__all__ = ["TrainConfig", "make_train_step", "init_train_state"]

@@ -1,0 +1,29 @@
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+sys.path.insert(0, SRC)
+
+
+def run_multidevice(code: str, n_devices: int = 8, timeout: int = 600):
+    """Run a python snippet in a subprocess with N fake CPU devices.
+
+    The main pytest process must keep seeing ONE device (smoke tests and
+    benches depend on it), so every multi-device test runs isolated."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, "-c", code], env=env, timeout=timeout,
+                       capture_output=True, text=True)
+    assert r.returncode == 0, f"subprocess failed:\n{r.stdout}\n{r.stderr}"
+    return r.stdout
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,134 @@
+"""AWP algorithm tests: recipes, convergence, theory (Appendix A)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import awp, calibration as calib, metrics
+from repro.core.baselines import wanda, magnitude
+
+
+def _problem(rng, d_in=96, d_out=48, n=512, outliers=True):
+    scales = np.ones(d_in)
+    if outliers:
+        scales[rng.choice(d_in, d_in // 10, replace=False)] = 8.0
+    x = (rng.normal(size=(n, d_in)) * scales).astype(np.float32)
+    w = rng.normal(size=(d_out, d_in)).astype(np.float32)
+    st_ = calib.update(calib.init(d_in), jnp.asarray(x))
+    return jnp.asarray(w), calib.covariance(st_), st_
+
+
+def test_prune_beats_wanda_and_magnitude(rng):
+    w, c, _ = _problem(rng)
+    k = 48
+    l_awp = float(awp.activation_loss(w, awp.prune(w, c, k).theta, c))
+    l_wanda = float(awp.activation_loss(w, wanda.prune_weight(w, c, k), c))
+    l_mag = float(awp.activation_loss(w, magnitude.prune_weight(w, k), c))
+    assert l_awp <= l_wanda + 1e-6
+    assert l_awp <= l_mag + 1e-6
+
+
+def test_prune_row_sparsity(rng):
+    w, c, _ = _problem(rng)
+    theta = np.asarray(awp.prune(w, c, 24).theta)
+    assert ((theta != 0).sum(axis=1) <= 24).all()
+
+
+def test_prune_nm(rng):
+    w, c, _ = _problem(rng, d_in=64)
+    theta = np.asarray(awp.prune(w, c, 32, nm=(2, 4)).theta)
+    g = theta.reshape(theta.shape[0], -1, 4)
+    assert ((g != 0).sum(axis=-1) <= 2).all()
+
+
+def test_quantize_improves_or_matches_rtn(rng):
+    from repro.core.baselines import rtn
+    w, c, _ = _problem(rng, d_in=128)
+    q_awp = awp.quantize(w, c, 4, group_size=64).theta
+    q_rtn = rtn.quantize_weight(w, 4, 64)
+    assert float(awp.activation_loss(w, q_awp, c)) <= \
+        float(awp.activation_loss(w, q_rtn, c)) + 1e-6
+
+
+def test_quantize_scaled_beats_plain(rng):
+    w, c, stats = _problem(rng, d_in=128)
+    am = calib.act_mean_abs(stats)
+    l_plain = float(awp.activation_loss(w, awp.quantize(w, c, 4, group_size=64).theta, c))
+    l_scaled = float(awp.activation_loss(
+        w, awp.quantize_scaled(w, c, am, 4, group_size=64).theta, c))
+    assert l_scaled <= l_plain + 1e-6
+
+
+def test_joint_is_sparse_and_quantized(rng):
+    w, c, _ = _problem(rng, d_in=128)
+    theta = np.asarray(awp.joint(w, c, 64, 4, group_size=64).theta)
+    assert ((theta != 0).sum(axis=1) <= 64).all()
+    # nonzeros lie on a 16-level grid per (row, group): few unique values
+    row = theta[0].reshape(2, 64)
+    for g in row:
+        nz = np.unique(g[g != 0])
+        assert len(nz) <= 16
+
+
+def test_fig1_loss_trace_decreases(rng):
+    w, c, _ = _problem(rng)
+    res = awp.prune(w, c, 48, trace_loss=True, max_iters=60)
+    tr = np.asarray(res.loss_trace)
+    assert tr[-1] <= tr[0]
+    assert (np.diff(tr) <= 1e-4).all()          # monotone within tolerance
+
+
+def test_stopping_criterion_engages(rng):
+    # C = I, k = d_in: unconstrained geometric convergence — the ‖∇f‖/‖W‖
+    # stopping rule must fire well before the 200-iteration cap.
+    w = jnp.asarray(rng.normal(size=(16, 96)), jnp.float32)
+    c = jnp.eye(96)
+    res = awp.prune(w, c, 96, theta0=jnp.zeros_like(w))
+    assert int(res.iters) < 200
+    assert float(res.grad_norm) < 1e-4
+
+
+def test_certified_eta_converges(rng):
+    """Appendix A.2: with η = 1/(2λmax) the loss is non-increasing on a
+    well-conditioned problem."""
+    w, c, _ = _problem(rng, outliers=False)
+    eta = metrics.certified_eta(c)
+    from repro.core import projections as proj
+    res = awp.pgd(w, c, lambda z, t: proj.topk_row(z, 48),
+                  proj.topk_row(w, 48), awp.PGDConfig(max_iters=40, tol=0.0,
+                                                      eta_scale=1.0,
+                                                      trace_loss=True))
+    # eta_scale=1.0 means η = 1/‖C‖_F ≥ certified; rerun explicitly:
+    def step(theta):
+        z = theta + eta * (w - theta) @ c
+        return proj.topk_row(z, 48)
+    theta = proj.topk_row(w, 48)
+    prev = float(awp.activation_loss(w, theta, c))
+    for _ in range(20):
+        theta = step(theta)
+        cur = float(awp.activation_loss(w, theta, c))
+        assert cur <= prev + 1e-5
+        prev = cur
+
+
+def test_condition_number_and_eta():
+    c = np.diag([1.0, 4.0]).astype(np.float32)
+    assert abs(metrics.condition_number(c) - 4.0) < 1e-6
+    assert abs(metrics.certified_eta(c) - 1 / 8.0) < 1e-9
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_property_awp_never_worse_than_init(seed):
+    """PGD with Wanda init must end ≤ Wanda's loss (it could only stall)."""
+    rng = np.random.default_rng(seed)
+    d_in = 64
+    x = rng.normal(size=(256, d_in)).astype(np.float32)
+    w = jnp.asarray(rng.normal(size=(16, d_in)), np.float32)
+    c = calib.covariance(calib.update(calib.init(d_in), jnp.asarray(x)))
+    k = 32
+    init = wanda.prune_weight(w, c, k)
+    res = awp.prune(w, c, k)
+    assert float(awp.activation_loss(w, res.theta, c)) <= \
+        float(awp.activation_loss(w, init, c)) + 1e-5

@@ -1,0 +1,36 @@
+"""Calibration statistics: streaming equivalence, damping, derived scales."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import calibration as calib
+
+
+def test_streaming_equals_batch(rng):
+    x = rng.normal(size=(512, 32)).astype(np.float32)
+    st = calib.init(32)
+    for chunk in np.split(x, 8):
+        st = calib.update(st, jnp.asarray(chunk))
+    c_stream = np.asarray(calib.covariance(st))
+    c_batch = x.T @ x / len(x)
+    np.testing.assert_allclose(c_stream, c_batch, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(calib.act_mean_abs(st)),
+                               np.abs(x).mean(0), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(calib.col_l2(st)),
+                               np.linalg.norm(x, axis=0), rtol=1e-4)
+
+
+def test_update_flattens_leading_dims(rng):
+    x = rng.normal(size=(4, 16, 8)).astype(np.float32)
+    st = calib.update(calib.init(8), jnp.asarray(x))
+    assert float(st.n) == 64
+
+
+def test_damping_regularizes():
+    st = calib.init(4)
+    st = calib.update(st, jnp.asarray(np.ones((8, 4), np.float32)))
+    c0 = np.asarray(calib.covariance(st))           # rank-1: singular
+    c1 = np.asarray(calib.covariance(st, damp=0.01))
+    assert np.linalg.matrix_rank(c0) == 1
+    assert np.linalg.matrix_rank(c1) == 4
+    ev = np.linalg.eigvalsh(c1)
+    assert ev[0] > 0

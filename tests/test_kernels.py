@@ -1,0 +1,90 @@
+"""Per-kernel validation: shape/dtype sweeps, Pallas (interpret) vs ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.quant.qtensor import QTensor
+
+
+@pytest.mark.parametrize("m,k", [(32, 64), (100, 300), (128, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_awp_pgd_step(rng, m, k, dtype):
+    w = jnp.asarray(rng.normal(size=(m, k)), dtype)
+    th = jnp.asarray(rng.normal(size=(m, k)), dtype)
+    c = jnp.asarray(rng.normal(size=(k, k)), dtype)
+    out = ops.awp_pgd_step(w, th, c, 0.17)
+    oracle = ref.awp_pgd_step(w, th, c, 0.17)
+    tol = 2e-5 if dtype == jnp.float32 else 6e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(oracle, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("rows,d,k", [(16, 256, 128), (7, 100, 13),
+                                      (32, 512, 1), (8, 64, 63)])
+def test_topk_row_kernel(rng, rows, d, k):
+    z = jnp.asarray(rng.normal(size=(rows, d)), jnp.float32)
+    out = np.asarray(ops.topk_row(z, k))
+    assert ((out != 0).sum(axis=1) == k).all()
+    np.testing.assert_allclose(out, np.asarray(ref.topk_row(z, k)), atol=1e-6)
+
+
+def test_topk_row_kernel_ties(rng):
+    z = jnp.asarray(np.round(rng.normal(size=(4, 64)), 1), jnp.float32)
+    out = np.asarray(ops.topk_row(z, 20))
+    assert ((out != 0).sum(axis=1) == 20).all()
+    # same kept-magnitude objective as the sort-based oracle
+    np.testing.assert_allclose(
+        np.abs(out).sum(1),
+        np.sort(np.abs(np.asarray(z)), axis=1)[:, -20:].sum(1), rtol=1e-6)
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4, 8])
+@pytest.mark.parametrize("rows,d,g", [(16, 256, 128), (5, 384, 128), (8, 64, 32)])
+def test_quant_proj_kernel(rng, bits, rows, d, g):
+    z = jnp.asarray(rng.normal(size=(rows, d)), jnp.float32)
+    np.testing.assert_allclose(np.asarray(ops.quant_project(z, bits, g)),
+                               np.asarray(ref.quant_project(z, bits, g)),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("m,n,k", [(24, 96, 256), (8, 64, 128), (33, 50, 384)])
+def test_dequant_matmul_kernel(rng, m, n, k):
+    w = jnp.asarray(rng.normal(size=(n, k)), jnp.float32)
+    qt = QTensor.from_dense(w, 4, 128)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    out = ops.dequant_matmul(x, qt.packed, qt.scale, qt.zero, 128)
+    oracle = ref.dequant_matmul(x, qt.packed, qt.scale, qt.zero, 128)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(oracle), np.asarray(x @ qt.dequant().T),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_fused_prune_loop_matches_library(rng):
+    from repro.core import awp
+    w = jnp.asarray(rng.normal(size=(32, 64)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(256, 64)), jnp.float32)
+    c = x.T @ x / 256
+    eta = 2.0 / float(jnp.linalg.norm(c))
+    k = 32
+    th_kernel = ops.awp_prune_fused(w, c, k, eta, iters=15,
+                                    theta0=ops.topk_row(w, k))
+    th = ref.topk_row(w, k)
+    for _ in range(15):
+        th = ref.topk_row(ref.awp_pgd_step(w, th, c, eta), k)
+    np.testing.assert_allclose(np.asarray(th_kernel), np.asarray(th),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 60), st.integers(0, 2 ** 31 - 1))
+def test_property_topk_kernel_vs_oracle(k, seed):
+    rng = np.random.default_rng(seed)
+    z = jnp.asarray(rng.normal(size=(3, 61)), jnp.float32)
+    out = np.asarray(ops.topk_row(z, k))
+    assert ((out != 0).sum(axis=1) == k).all()
+    np.testing.assert_allclose(out, np.asarray(ref.topk_row(z, k)), atol=1e-6)

@@ -1,0 +1,98 @@
+"""Unit + hypothesis property tests for the projection operators."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import projections as proj
+
+
+def test_topk_row_exact_k(rng):
+    z = jnp.asarray(rng.normal(size=(16, 64)), jnp.float32)
+    out = proj.topk_row(z, 10)
+    assert ((np.asarray(out) != 0).sum(axis=1) == 10).all()
+    # kept entries are the largest by |.|
+    kept = np.sort(np.abs(np.asarray(out)), axis=1)[:, -10:]
+    best = np.sort(np.abs(np.asarray(z)), axis=1)[:, -10:]
+    np.testing.assert_allclose(kept, best)
+
+
+def test_topk_row_edges(rng):
+    z = jnp.asarray(rng.normal(size=(4, 8)), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(proj.topk_row(z, 8)), np.asarray(z))
+    assert (np.asarray(proj.topk_row(z, 0)) == 0).all()
+
+
+def test_topk_matrix(rng):
+    z = jnp.asarray(rng.normal(size=(8, 8)), jnp.float32)
+    out = proj.topk_matrix(z, 5)
+    assert (np.asarray(out) != 0).sum() == 5
+
+
+def test_prune_n_m(rng):
+    z = jnp.asarray(rng.normal(size=(8, 32)), jnp.float32)
+    out = np.asarray(proj.prune_n_m(z, 2, 4))
+    groups = out.reshape(8, 8, 4)
+    assert ((groups != 0).sum(axis=-1) == 2).all()
+
+
+def test_topk_row_dynamic_matches_static(rng):
+    z = jnp.asarray(rng.normal(size=(6, 40)), jnp.float32)
+    for k in (4, 20, 39):
+        dyn = proj.topk_row_dynamic(z, jnp.float32(k / 40))
+        stat = proj.topk_row(z, k)
+        np.testing.assert_allclose(np.asarray(dyn), np.asarray(stat))
+
+
+def test_ramp_ratio():
+    r = [float(proj.ramp_ratio(jnp.int32(t), 0.8, 25)) for t in range(30)]
+    assert abs(r[0] - 0.8 / 25) < 1e-6
+    assert abs(r[24] - 0.8) < 1e-6 and abs(r[29] - 0.8) < 1e-6
+    assert all(b >= a - 1e-9 for a, b in zip(r, r[1:]))
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4, 8])
+def test_quant_grid_membership(rng, bits):
+    z = jnp.asarray(rng.normal(size=(8, 64)) * 3, jnp.float32)
+    qp = proj.quant_params(z, bits, 32)
+    assert qp.q.min() >= 0 and qp.q.max() <= 2 ** bits - 1
+    deq = proj.quant_project(z, bits, 32)
+    # projection error bounded by half a bin per entry
+    g = np.asarray(z).reshape(8, 2, 32)
+    width = (g.max(-1) - g.min(-1)) / (2 ** bits - 1)
+    err = np.abs(np.asarray(deq).reshape(8, 2, 32) - g)
+    assert (err <= width[..., None] * 0.5 + 1e-5).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 63), st.integers(0, 2 ** 31 - 1))
+def test_property_topk_idempotent(k, seed):
+    rng = np.random.default_rng(seed)
+    z = jnp.asarray(rng.normal(size=(4, 64)), jnp.float32)
+    once = proj.topk_row(z, k)
+    twice = proj.topk_row(once, k)
+    np.testing.assert_allclose(np.asarray(once), np.asarray(twice))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.sampled_from([2, 3, 4, 8]), st.integers(0, 2 ** 31 - 1))
+def test_property_quant_idempotent(bits, seed):
+    rng = np.random.default_rng(seed)
+    z = jnp.asarray(rng.normal(size=(4, 64)), jnp.float32)
+    once = proj.quant_project(z, bits, 32)
+    twice = proj.quant_project(once, bits, 32)
+    np.testing.assert_allclose(np.asarray(once), np.asarray(twice),
+                               rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 31), st.integers(0, 2 ** 31 - 1))
+def test_property_projection_nonexpansive(k, seed):
+    """Proj is the closest point of the constraint set: the projection can
+    never be farther from z than any other set member (here: 0)."""
+    rng = np.random.default_rng(seed)
+    z = jnp.asarray(rng.normal(size=(4, 32)), jnp.float32)
+    p = proj.topk_row(z, k)
+    d_proj = float(jnp.linalg.norm(z - p))
+    assert d_proj <= float(jnp.linalg.norm(z)) + 1e-5

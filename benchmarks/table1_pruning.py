@@ -4,7 +4,8 @@ small LM (llama2-7b tiny preset) with its real activation statistics."""
 import numpy as np
 
 from benchmarks.common import trained_bench_model, ppl
-from repro.core.compress import CompressionConfig, compress_model
+from repro.core.compress import compress_model
+from repro.core.specs import PruneSpec
 
 RATIOS = (0.5, 0.6, 0.7, 0.8, 0.9)
 METHODS = ("magnitude", "wanda", "sparsegpt", "awp_prune")
@@ -17,7 +18,7 @@ def run():
     table = {}
     for method in METHODS:
         for ratio in RATIOS:
-            cfg = CompressionConfig(method=method, ratio=ratio)
+            cfg = PruneSpec(method=method, ratio=ratio)
             cp, _ = compress_model(model, params, calib, cfg)
             p = ppl(model, cp, eval_batches)
             table[(method, ratio)] = p

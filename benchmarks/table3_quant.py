@@ -1,7 +1,8 @@
 """Table 3 analogue: perplexity of the INT4/INT3/INT2 quantized model for
 RTN / GPTQ / AWQ / AWP / AWP-S (scaled-space, beyond-paper)."""
 from benchmarks.common import trained_bench_model, ppl
-from repro.core.compress import CompressionConfig, compress_model
+from repro.core.compress import compress_model
+from repro.core.specs import QuantSpec
 
 BITS = (4, 3, 2)
 METHODS = ("rtn", "gptq", "awq", "awp_quant", "awp_quant_scaled")
@@ -13,7 +14,7 @@ def run():
     table = {}
     for method in METHODS:
         for bits in BITS:
-            cfg = CompressionConfig(method=method, bits=bits, group_size=64)
+            cfg = QuantSpec(method=method, bits=bits, group_size=64)
             cp, _ = compress_model(model, params, calib, cfg)
             p = ppl(model, cp, eval_batches)
             table[(method, bits)] = p

@@ -2,7 +2,8 @@
 joint recipe vs the sequential AWQ+Wanda / Wanda+AWQ pipelines, plus the
 §4.3 headline: INT4 + 75% pruning beats INT2 at equal effective bits."""
 from benchmarks.common import trained_bench_model, ppl
-from repro.core.compress import CompressionConfig, compress_model
+from repro.core.compress import compress_model
+from repro.core.specs import JointSpec, QuantSpec
 
 RATIOS = (0.25, 0.5, 0.75)
 METHODS = ("awq_wanda", "wanda_awq", "awp_joint")
@@ -14,14 +15,14 @@ def run():
     table = {}
     for method in METHODS:
         for ratio in RATIOS:
-            cfg = CompressionConfig(method=method, ratio=ratio, bits=4,
-                                    group_size=64)
+            cfg = JointSpec(method=method, ratio=ratio, bits=4,
+                            group_size=64)
             cp, _ = compress_model(model, params, calib, cfg)
             p = ppl(model, cp, eval_batches)
             table[(method, ratio)] = p
             rows.append((method, ratio, p))
     # INT2 reference for the equal-effective-bits comparison
-    cfg2 = CompressionConfig(method="awp_quant", bits=2, group_size=64)
+    cfg2 = QuantSpec(method="awp_quant", bits=2, group_size=64)
     cp2, _ = compress_model(model, params, calib, cfg2)
     p_int2 = ppl(model, cp2, eval_batches)
     rows.append(("awp_quant_int2", 0.0, p_int2))

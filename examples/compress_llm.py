@@ -11,7 +11,8 @@ import numpy as np
 
 from repro.configs import get_tiny_config
 from repro.core import metrics
-from repro.core.compress import CompressionConfig, compress_model
+from repro.core.compress import compress_model
+from repro.core.specs import JointSpec, PruneSpec
 from repro.data import DataConfig, ZipfMarkov, calibration_batches
 from repro.models import build_model
 from repro.optim import OptimizerConfig
@@ -58,11 +59,11 @@ print(f"\ndense perplexity: {ppl(params):.3f}")
 print(f"pruning to {args.ratio:.0%}:")
 for method in ("magnitude", "wanda", "awp_prune"):
     cp, _ = compress_model(model, params, calib,
-                           CompressionConfig(method=method, ratio=args.ratio))
+                           PruneSpec(method=method, ratio=args.ratio))
     print(f"  {method:12s} ppl: {ppl(cp):.3f}")
 print("joint prune+INT4:")
 for method in ("awq_wanda", "wanda_awq", "awp_joint"):
     cp, _ = compress_model(model, params, calib,
-                           CompressionConfig(method=method, ratio=args.ratio,
-                                             bits=4, group_size=64))
+                           JointSpec(method=method, ratio=args.ratio,
+                                     bits=4, group_size=64))
     print(f"  {method:12s} ppl: {ppl(cp):.3f}")

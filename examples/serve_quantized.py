@@ -1,21 +1,23 @@
-"""E2E serving driver: compress a small LM with AWP INT4 + pack the weights
-into int4 QTensors + serve a batch of requests, comparing dense vs packed
-dequant-matmul decode (the deployment payoff of the paper's method).
+"""E2E serving driver: compress a small LM with a MIXED-PRECISION policy
+(8-bit attention / 4-bit MLP, block 0 left dense), write the packed QTensor
+checkpoint, and serve a batch of requests straight from the packed codes —
+the deployment payoff of the paper's method.
 
     PYTHONPATH=src python examples/serve_quantized.py
 """
+import tempfile
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import load_packed_checkpoint, save_packed_checkpoint
 from repro.configs import get_tiny_config
-from repro.core.compress import CompressionConfig, compress_model
+from repro.core.compress import compress_model
+from repro.core.specs import Policy, QuantSpec
 from repro.data import DataConfig, ZipfMarkov, calibration_batches
-from repro.kernels import ops
 from repro.models import build_model
-from repro.quant import QTensor
 
 cfg = get_tiny_config("llama32-1b")
 model = build_model(cfg, remat=False)
@@ -24,27 +26,30 @@ dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=48, global_batch=8)
 calib = [{"tokens": jnp.asarray(t), "labels": jnp.asarray(l)}
          for t, l in calibration_batches(dc, 2)]
 
-print("AWP INT4-quantizing the model (layer-wise PGD) ...")
-cp, reports = compress_model(
-    model, params, calib,
-    CompressionConfig(method="awp_quant", bits=4, group_size=64))
-print(f"  {len(reports)} linears quantized, "
-      f"mean recon loss {np.mean([r.loss_after for r in reports]):.4f}")
+policy = Policy({
+    "blocks.0.*": None,                          # most-sensitive block: dense
+    "*.attn.*": QuantSpec(bits=8, group_size=64),
+    "*.mlp.*": QuantSpec(bits=4, group_size=64),
+})
+print("AWP-quantizing with mixed-precision policy (8b attn / 4b mlp, "
+      "block 0 dense) ...")
+cp, report = compress_model(model, params, calib, policy)
+print("  " + report.summary().replace("\n", "\n  "))
 
-# pack every block linear into int4 QTensors
-packed, dense_bytes, packed_bytes = {}, 0, 0
-for i in range(model.num_blocks()):
-    for name, path, _ in model.block_linears(i):
-        from repro.core.compress import get_linear
-        w = get_linear(cp, path, i)
-        qt = QTensor.from_dense(jnp.asarray(w), 4, 64)
-        packed[(i, name)] = qt
-        dense_bytes += w.size * 4
-        packed_bytes += qt.nbytes()
-print(f"  weight bytes: {dense_bytes/1e6:.1f}MB dense -> "
+dense_bytes = sum(int(np.prod(a.result.qtensor.shape)) * 4
+                  for a in report.packed_layers().values())
+packed_bytes = sum(a.result.qtensor.nbytes()
+                   for a in report.packed_layers().values())
+print(f"  quantized-layer bytes: {dense_bytes/1e6:.1f}MB dense -> "
       f"{packed_bytes/1e6:.1f}MB packed ({dense_bytes/packed_bytes:.1f}x)")
 
-# serve a batch of requests with the compressed model
+# write the packed checkpoint, then serve FROM it (no re-quantization)
+tmp = tempfile.mkdtemp(prefix="awp_packed_")
+path = save_packed_checkpoint(tmp, 0, cp, report)
+served_params, qts, _ = load_packed_checkpoint(path, params)
+print(f"  packed checkpoint: {path} ({len(qts)} QTensor layers)")
+
+# the packed load reproduces the compressed model bit-for-bit
 B, PROMPT, GEN = 8, 32, 16
 gen = ZipfMarkov(dc)
 prompts, _ = gen.batch(0)
@@ -53,12 +58,19 @@ cache = model.init_cache(B, PROMPT + GEN, jnp.float32)
 prefill = jax.jit(model.prefill)
 decode = jax.jit(model.decode_step, donate_argnums=2)
 
-logits, cache = prefill(cp, {"tokens": prompts}, cache)
+logits_ref, _ = prefill(cp, {"tokens": prompts},
+                        model.init_cache(B, PROMPT + GEN, jnp.float32))
+logits, cache = prefill(served_params, {"tokens": prompts}, cache)
+err = float(jnp.abs(logits - logits_ref).max())
+print(f"  packed-checkpoint logits vs dequantized reference: "
+      f"max err {err:.2e}")
+assert err == 0.0
+
 tok = jnp.argmax(logits[:, -1], -1)[:, None]
 t0 = time.time()
 outs = [tok]
 for _ in range(GEN - 1):
-    logits, cache = decode(cp, tok, cache)
+    logits, cache = decode(served_params, tok, cache)
     tok = jnp.argmax(logits[:, -1], -1)[:, None]
     outs.append(tok)
 jax.block_until_ready(tok)
@@ -66,12 +78,15 @@ dt = time.time() - t0
 print(f"  served {B} requests x {GEN} tokens: "
       f"{B * (GEN - 1) / dt:.0f} tok/s decode")
 
-# spot-check: the packed dequant-matmul path agrees with the dense weights
-w = np.asarray(cp["blocks"]["mlp"]["wu"][0]).T
-qt = QTensor.from_dense(jnp.asarray(w), 4, 64)
-x = jnp.asarray(np.random.default_rng(0).normal(size=(4, w.shape[1])), jnp.float32)
-y_kernel = ops.dequant_matmul(x, qt.packed, qt.scale, qt.zero, 64)
-err = float(jnp.abs(y_kernel - x @ jnp.asarray(w).T).max())
-print(f"  packed-kernel vs dense matmul max err: {err:.2e}  "
-      f"(int4 path exact up to grid)")
+# spot-check: the fused Pallas kernel path (int4 nibble-packed layers only;
+# kernel_matmul falls back to reference dequant for other layouts) agrees
+# with the reference dequant-matmul
+name, art = next((n, a) for n, a in report.packed_layers().items()
+                 if a.result.qtensor.bits == 4)
+qt = art.result.qtensor
+x = jnp.asarray(np.random.default_rng(0).normal(size=(4, qt.shape[1])),
+                jnp.float32)
+err = float(jnp.abs(qt.kernel_matmul(x) - qt.matmul(x)).max())
+print(f"  fused kernel vs reference dequant-matmul on {name}: "
+      f"max err {err:.2e}")
 print("done.")

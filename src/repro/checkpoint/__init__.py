@@ -1,4 +1,7 @@
-from repro.checkpoint.checkpoint import (save_checkpoint, restore_checkpoint,
-                                         CheckpointManager)
+from repro.checkpoint.checkpoint import (CheckpointManager, latest_step,
+                                         load_packed_checkpoint,
+                                         restore_checkpoint, save_checkpoint,
+                                         save_packed_checkpoint)
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "CheckpointManager"]
+__all__ = ["CheckpointManager", "latest_step", "load_packed_checkpoint",
+           "restore_checkpoint", "save_checkpoint", "save_packed_checkpoint"]

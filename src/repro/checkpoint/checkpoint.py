@@ -32,8 +32,11 @@ def _flatten(tree):
     return {jax.tree_util.keystr(path): leaf for path, leaf in leaves}
 
 
-def save_checkpoint(directory: str, step: int, tree: Any) -> str:
-    """Atomic save; returns the final path."""
+def _write_step_dir(directory: str, step: int, tree: Any, *,
+                    extra_manifest: Optional[dict] = None,
+                    extra_arrays: Optional[dict] = None,
+                    compress: bool = False) -> str:
+    """Shared atomic writer: step_<N>.tmp → os.rename(step_<N>)."""
     os.makedirs(directory, exist_ok=True)
     final = os.path.join(directory, f"step_{step:08d}")
     tmp = final + ".tmp"
@@ -47,10 +50,14 @@ def save_checkpoint(directory: str, step: int, tree: Any) -> str:
         if arr.dtype.kind == "V":        # ml_dtypes (bf16/fp8): npz can't
             arr = arr.astype(np.float32)  # round-trip; f32 widening is exact
         arrays[k] = arr
-    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    savez = np.savez_compressed if compress else np.savez
+    savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    if extra_arrays:
+        np.savez_compressed(os.path.join(tmp, "packed.npz"), **extra_arrays)
     manifest = {"step": step,
                 "keys": sorted(arrays.keys()),
                 "treedef": str(jax.tree_util.tree_structure(tree))}
+    manifest.update(extra_manifest or {})
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
     if os.path.exists(final):
@@ -59,11 +66,28 @@ def save_checkpoint(directory: str, step: int, tree: Any) -> str:
     return final
 
 
+def save_checkpoint(directory: str, step: int, tree: Any) -> str:
+    """Atomic save; returns the final path."""
+    return _write_step_dir(directory, step, tree)
+
+
 def restore_checkpoint(path: str, target: Any,
-                       shardings: Optional[Any] = None) -> Any:
+                       shardings: Optional[Any] = None, *,
+                       _allow_packed: bool = False) -> Any:
     """Restore into the structure of ``target``. If ``shardings`` (a pytree
     of NamedSharding matching target) is given, leaves are placed directly
     onto the (possibly different) mesh — elastic restart."""
+    if not _allow_packed:
+        # a packed checkpoint's dense arrays have zeroed holes where the
+        # QTensor codes live — loading it densely would silently serve
+        # zeroed weights
+        man_path = os.path.join(path, "manifest.json")
+        if os.path.exists(man_path):
+            with open(man_path) as f:
+                if "packed" in json.load(f):
+                    raise ValueError(
+                        f"{path} is a packed checkpoint — load it with "
+                        f"load_packed_checkpoint (serve with --packed)")
     with np.load(os.path.join(path, "arrays.npz")) as z:
         data = {k: z[k] for k in z.files}
     paths = jax.tree_util.tree_flatten_with_path(target)[0]
@@ -81,6 +105,125 @@ def restore_checkpoint(path: str, target: Any,
         out.append(jax.device_put(arr, sh) if sh is not None
                    else jax.numpy.asarray(arr))
     return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Packed quantized checkpoints
+#
+# A packed checkpoint stores the param tree with every quantized layer's
+# dense slice ZEROED (arrays.npz is compressed, so the holes cost ~nothing)
+# plus a packed.npz holding the QTensor codes/scales (and sparsity masks,
+# bit-packed). Loading rebuilds the QTensors and materializes
+# ``qt.dequant()`` into the holes — serving never re-quantizes dense floats,
+# and the on-disk weight bytes shrink by the 4-8× packing factor.
+# ---------------------------------------------------------------------------
+
+def _packed_key(name: str, field: str) -> str:
+    return f"{name}#{field}"
+
+
+def save_packed_checkpoint(directory: str, step: int, params: Any,
+                           report: Any) -> str:
+    """Save ``params`` with the report's QTensor artifacts stored packed.
+
+    ``report`` is a :class:`repro.core.compress.CompressionReport` (anything
+    with ``packed_layers() -> {name: LayerArtifact}`` works). Returns the
+    final checkpoint path.
+    """
+    from repro.core.compress import resolve_path  # local: checkpoint is low-level
+    packed = report.packed_layers()
+    arrays: dict = {}
+    meta: dict = {}
+    holes: dict = {}                      # dict-key path → [stacked indices]
+    for name, art in packed.items():
+        qt = art.result.qtensor
+        arrays[_packed_key(name, "packed")] = np.asarray(qt.packed)
+        arrays[_packed_key(name, "scale")] = np.asarray(qt.scale)
+        arrays[_packed_key(name, "zero")] = np.asarray(qt.zero)
+        if qt.col_scale is not None:
+            arrays[_packed_key(name, "col_scale")] = np.asarray(qt.col_scale)
+        mask = art.result.mask
+        if mask is not None:
+            arrays[_packed_key(name, "mask")] = np.packbits(
+                np.asarray(mask).astype(bool))
+        meta[name] = {"bits": qt.bits, "group_size": qt.group_size,
+                      "shape": list(qt.shape), "path": list(art.path),
+                      "layer": art.layer,
+                      "has_mask": mask is not None,
+                      "has_col_scale": qt.col_scale is not None}
+        dict_path, idx = resolve_path(art.path, art.layer)
+        holes.setdefault(tuple(dict_path), []).append(idx)
+
+    def zero_holes(node, prefix=()):
+        # zero the dense slices so the compressed npz stores them in ~0
+        # bytes; one host copy per LEAF (not per layer — stacked-block
+        # leaves collect all their hole indices first)
+        if prefix in holes:
+            arr = np.array(node)          # host copy, written in place
+            for idx in holes[prefix]:
+                if idx:
+                    arr[idx] = 0
+                else:
+                    arr[...] = 0
+            return arr
+        if isinstance(node, dict):
+            return {k: zero_holes(v, prefix + (k,)) for k, v in node.items()}
+        return node
+
+    holed = zero_holes(params)
+    extra = {"packed": meta}
+    policy = getattr(report, "policy", None)
+    if policy is not None:
+        extra["policy"] = policy.to_dict()
+    return _write_step_dir(directory, step, holed, extra_manifest=extra,
+                           extra_arrays=arrays, compress=True)
+
+
+def load_packed_checkpoint(path: str, target: Any):
+    """Load a packed checkpoint: ``(params, {name: QTensor}, manifest)``.
+
+    The returned params have every packed layer materialized from its codes
+    (``qt.dequant()``, masked if a sparsity mask was stored) — bitwise what
+    ``compress_model`` produced, with no re-quantization. The QTensor dict
+    feeds kernel-path serving via ``QTensor.kernel_matmul`` (which uses the
+    fused Pallas kernel for plain nibble-packed int4 and the reference
+    dequant otherwise — the raw kernel supports neither other bit widths
+    nor ``col_scale``).
+    """
+    from repro.core.compress import set_linear
+    from repro.quant import QTensor
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    if "packed" not in manifest:
+        raise ValueError(
+            f"{path} is not a packed checkpoint (no 'packed' manifest "
+            f"entry) — load it with restore_checkpoint / serve without "
+            f"--packed")
+    params = restore_checkpoint(path, target, _allow_packed=True)
+    qtensors = {}
+    packed_meta = manifest.get("packed", {})
+    if not packed_meta:
+        return params, qtensors, manifest
+    with np.load(os.path.join(path, "packed.npz")) as z:
+        data = {k: z[k] for k in z.files}
+    for name, m in packed_meta.items():
+        shape = tuple(m["shape"])
+        col_scale = (jax.numpy.asarray(data[_packed_key(name, "col_scale")])
+                     if m["has_col_scale"] else None)
+        qt = QTensor(
+            packed=jax.numpy.asarray(data[_packed_key(name, "packed")]),
+            scale=jax.numpy.asarray(data[_packed_key(name, "scale")]),
+            zero=jax.numpy.asarray(data[_packed_key(name, "zero")]),
+            bits=int(m["bits"]), group_size=int(m["group_size"]),
+            shape=shape, col_scale=col_scale)
+        qtensors[name] = qt
+        w = qt.dequant()
+        if m["has_mask"]:
+            bits = np.unpackbits(data[_packed_key(name, "mask")],
+                                 count=shape[0] * shape[1])
+            w = w * jax.numpy.asarray(bits.reshape(shape).astype(np.float32))
+        params = set_linear(params, tuple(m["path"]), m["layer"], w)
+    return params, qtensors, manifest
 
 
 def latest_step(directory: str) -> Optional[int]:
@@ -118,12 +261,26 @@ class CheckpointManager:
     def latest_step(self) -> Optional[int]:
         return latest_step(self.directory)
 
-    def restore_latest(self, target, shardings=None):
+    def latest_path(self) -> Optional[str]:
         step = self.latest_step()
         if step is None:
+            return None
+        return os.path.join(self.directory, f"step_{step:08d}")
+
+    def restore_latest(self, target, shardings=None):
+        path = self.latest_path()
+        if path is None:
             return None, None
-        path = os.path.join(self.directory, f"step_{step:08d}")
+        step = int(os.path.basename(path).split("_")[1])  # the step we load
         return restore_checkpoint(path, target, shardings), step
+
+    def restore_latest_packed(self, target):
+        """(params, {name: QTensor}, manifest) from the newest packed
+        checkpoint, or (None, None, None) if the directory is empty."""
+        path = self.latest_path()
+        if path is None:
+            return None, None, None
+        return load_packed_checkpoint(path, target)
 
     def _rotate(self):
         steps = sorted(int(d.split("_")[1]) for d in os.listdir(self.directory)
@@ -133,4 +290,5 @@ class CheckpointManager:
 
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "save_packed_checkpoint", "load_packed_checkpoint",
            "CheckpointManager"]

@@ -1,0 +1,32 @@
+"""Version-compatibility shims for jax APIs that moved between releases.
+
+The codebase targets current jax (``jax.shard_map``, ``jax.set_mesh``,
+``jax.sharding.AxisType``); older releases (≤ 0.4.x) spell these
+``jax.experimental.shard_map.shard_map`` / ``with mesh:`` and have no axis
+types. Everything mesh/SPMD-shaped goes through here so the rest of the
+code reads as modern jax.
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+else:                                    # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map_old
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False):
+        return _shard_map_old(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=check_vma)
+
+
+def set_mesh(mesh):
+    """Context manager making ``mesh`` current for jit/shard_map."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh                          # Mesh is a context manager itself
+
+
+__all__ = ["shard_map", "set_mesh"]

@@ -206,10 +206,10 @@ def activation_loss(w: jax.Array, theta: jax.Array, c: jax.Array) -> jax.Array:
 
 @functools.partial(jax.jit, static_argnames=("bits", "group_size", "max_iters",
                                              "n_alphas"))
-def quantize_scaled(w: jax.Array, c: jax.Array, act_mean_abs: jax.Array,
-                    bits: int, *, group_size: int = 128, max_iters: int = 10,
-                    n_alphas: int = 21) -> AWPResult:
-    """AWP-S: α-grid scaled-space AWP quantization (beyond-paper)."""
+def _quantize_scaled_search(w: jax.Array, c: jax.Array, act_mean_abs: jax.Array,
+                            bits: int, group_size: int, max_iters: int,
+                            n_alphas: int):
+    """α-grid search core: (best theta, its loss, winning scale s)."""
     from repro.core import projections as proj_mod
     w = w.astype(jnp.float32)
     c = c.astype(jnp.float32)
@@ -227,13 +227,92 @@ def quantize_scaled(w: jax.Array, c: jax.Array, act_mean_abs: jax.Array,
         res = pgd(wp, cp, project, theta0,
                   PGDConfig(max_iters=max_iters, tol=0.0, eta_scale=1.5))
         theta = res.theta / s[None, :]
-        return theta, _loss(w, theta, c)
+        return theta, _loss(w, theta, c), s
 
     # lax.map keeps peak memory at one candidate at a time.
-    thetas, losses = jax.lax.map(run_alpha, alphas)
+    thetas, losses, scales = jax.lax.map(run_alpha, alphas)
     best = jnp.argmin(losses)
-    return AWPResult(theta=thetas[best], iters=jnp.int32(max_iters),
-                     grad_norm=losses[best], loss_trace=None)
+    return thetas[best], losses[best], scales[best]
+
+
+def quantize_scaled(w: jax.Array, c: jax.Array, act_mean_abs: jax.Array,
+                    bits: int, *, group_size: int = 128, max_iters: int = 10,
+                    n_alphas: int = 21) -> AWPResult:
+    """AWP-S: α-grid scaled-space AWP quantization (beyond-paper)."""
+    theta, loss, _ = _quantize_scaled_search(w, c, act_mean_abs, bits,
+                                             group_size, max_iters, n_alphas)
+    return AWPResult(theta=theta, iters=jnp.int32(max_iters),
+                     grad_norm=loss, loss_trace=None)
+
+
+# ---------------------------------------------------------------------------
+# Registry adapters — the paper recipes behind the uniform
+# compress(w, stats, spec) -> CompressResult signature.
+# ---------------------------------------------------------------------------
+
+from repro.core import calibration as _calib, registry as _registry  # noqa: E402
+from repro.core.specs import JointSpec as _JointSpec  # noqa: E402
+from repro.core.specs import PruneSpec as _PruneSpec  # noqa: E402
+from repro.core.specs import QuantSpec as _QuantSpec  # noqa: E402
+from repro.quant import QTensor as _QTensor  # noqa: E402
+
+
+def _prune_result(res: AWPResult) -> "_registry.CompressResult":
+    return _registry.CompressResult(
+        theta=res.theta, mask=res.theta != 0, iters=int(res.iters),
+        aux={"grad_norm": float(res.grad_norm)})
+
+
+@_registry.register("awp_prune", spec_cls=_PruneSpec)
+def _awp_prune(w, stats, spec):
+    c = _calib.covariance(stats, damp=spec.damp)
+    return _prune_result(prune(w, c, spec.k_for(w.shape[1])))
+
+
+@_registry.register("awp_prune_nm", spec_cls=_PruneSpec)
+def _awp_prune_nm(w, stats, spec):
+    c = _calib.covariance(stats, damp=spec.damp)
+    return _prune_result(prune(w, c, spec.k_for(w.shape[1]),
+                               nm=spec.nm or (2, 4)))
+
+
+@_registry.register("awp_quant", spec_cls=_QuantSpec)
+def _awp_quant(w, stats, spec):
+    c = _calib.covariance(stats, damp=spec.damp)
+    g = spec.group_for(w.shape[1])
+    res = quantize(w, c, spec.bits, group_size=g)
+    # res.theta is on the group grid already, so packing is a near-exact
+    # regrid; the codes become the source of truth (theta = dequant(codes)).
+    qt = _QTensor.from_dense(res.theta, spec.bits, g)
+    return _registry.CompressResult(theta=qt.dequant(), qtensor=qt,
+                                    iters=int(res.iters),
+                                    aux={"grad_norm": float(res.grad_norm)})
+
+
+@_registry.register("awp_quant_scaled", spec_cls=_QuantSpec)
+def _awp_quant_scaled(w, stats, spec):
+    c = _calib.covariance(stats, damp=spec.damp)
+    am = _calib.act_mean_abs(stats)
+    g = spec.group_for(w.shape[1])
+    theta, loss, s = _quantize_scaled_search(w, c, am, spec.bits, g, 10, 21)
+    # theta·diag(s) is on the group grid — pack in scaled space (AWQ-style).
+    qt = _QTensor.from_dense(theta, spec.bits, g, col_scale=s)
+    return _registry.CompressResult(theta=qt.dequant(), qtensor=qt, iters=10,
+                                    aux={"col_scaled": True})
+
+
+@_registry.register("awp_joint", spec_cls=_JointSpec)
+def _awp_joint(w, stats, spec):
+    c = _calib.covariance(stats, damp=spec.damp)
+    g = spec.group_for(w.shape[1])
+    res = joint(w, c, spec.k_for(w.shape[1]), spec.bits, group_size=g)
+    mask = res.theta != 0
+    # Zeros land exactly on the zero-point code, so the packed artifact
+    # preserves the sparsity pattern bit-exactly.
+    qt = _QTensor.from_dense(res.theta, spec.bits, g)
+    theta = qt.dequant() * mask
+    return _registry.CompressResult(theta=theta, mask=mask, qtensor=qt,
+                                    iters=int(res.iters))
 
 
 __all__ = ["AWPResult", "PGDConfig", "pgd", "prune", "quantize", "joint",

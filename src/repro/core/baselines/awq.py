@@ -13,7 +13,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core import projections as proj
+from repro.core import calibration as calib, projections as proj, registry
+from repro.core.specs import QuantSpec
+from repro.quant import QTensor
 
 _ALPHA_GRID = tuple(i / 20 for i in range(21))   # 0.00, 0.05, ..., 1.00
 
@@ -23,9 +25,10 @@ def _loss(e: jax.Array, c: jax.Array) -> jax.Array:
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "group_size"))
-def quantize_weight(w: jax.Array, c: jax.Array, act_mean_abs: jax.Array,
-                    bits: int, group_size: int = 128) -> jax.Array:
-    """Return the dequantized AWQ weight (paper orientation d_out × d_in).
+def quantize_weight_with_scale(w: jax.Array, c: jax.Array,
+                               act_mean_abs: jax.Array, bits: int,
+                               group_size: int = 128):
+    """(dequantized AWQ weight, winning per-channel scale s).
 
     act_mean_abs: per-input-channel mean |x| from calibration
     (:func:`repro.core.calibration.act_mean_abs`).
@@ -34,17 +37,36 @@ def quantize_weight(w: jax.Array, c: jax.Array, act_mean_abs: jax.Array,
     c = c.astype(jnp.float32)
     a = jnp.maximum(act_mean_abs.astype(jnp.float32), 1e-8)
 
-    def candidate(alpha: float) -> jax.Array:
+    def candidate(alpha: float):
         s = a ** alpha
         s = s / jnp.sqrt(jnp.maximum(s.max() * s.min(), 1e-12))  # official norm
         s = jnp.clip(s, 1e-4, 1e4)
         wq = proj.quant_project(w * s[None, :], bits, group_size) / s[None, :]
-        return wq
+        return wq, s
 
-    cands = jnp.stack([candidate(al) for al in _ALPHA_GRID])     # (A, do, di)
+    cands, scales = map(jnp.stack, zip(*(candidate(al) for al in _ALPHA_GRID)))
     losses = jax.vmap(lambda wq: _loss(w - wq, c))(cands)
     best = jnp.argmin(losses)
-    return cands[best]
+    return cands[best], scales[best]
 
 
-__all__ = ["quantize_weight"]
+def quantize_weight(w: jax.Array, c: jax.Array, act_mean_abs: jax.Array,
+                    bits: int, group_size: int = 128) -> jax.Array:
+    """Return the dequantized AWQ weight (paper orientation d_out × d_in)."""
+    return quantize_weight_with_scale(w, c, act_mean_abs, bits, group_size)[0]
+
+
+@registry.register("awq", spec_cls=QuantSpec)
+def _compress(w, stats, spec):
+    c = calib.covariance(stats, damp=spec.damp)
+    am = calib.act_mean_abs(stats)
+    g = spec.group_for(w.shape[1])
+    wq, s = quantize_weight_with_scale(w, c, am, spec.bits, g)
+    # wq·diag(s) is exactly on the group grid, so packing in scaled space
+    # (col_scale=s) round-trips: qt.dequant() == wq up to regrid rounding.
+    qt = QTensor.from_dense(wq, spec.bits, g, col_scale=s)
+    return registry.CompressResult(theta=qt.dequant(), qtensor=qt,
+                                   aux={"col_scaled": True})
+
+
+__all__ = ["quantize_weight", "quantize_weight_with_scale"]

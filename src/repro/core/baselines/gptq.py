@@ -9,7 +9,9 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.core import registry as _registry
 from repro.core.baselines.sparsegpt import _prepare_hinv
+from repro.core.specs import QuantSpec as _QuantSpec
 
 
 def _group_qparams(block: np.ndarray, bits: int):
@@ -24,18 +26,28 @@ def _group_qparams(block: np.ndarray, bits: int):
 
 def _quant_col(col, scale, zero, qmax):
     q = np.clip(np.round(col / scale) + zero, 0, qmax)
-    return (q - zero) * scale
+    return (q - zero) * scale, q
 
 
 def quantize_weight(w, c, bits: int, group_size: int = 128,
-                    blocksize: int = 128) -> np.ndarray:
-    """Quantize w (d_out, d_in) to INT-`bits` with per-(row, group) scales."""
+                    blocksize: int = 128, return_qparams: bool = False):
+    """Quantize w (d_out, d_in) to INT-`bits` with per-(row, group) scales.
+
+    With ``return_qparams`` also returns the integer codes and per-group
+    scale/zero actually used — the grids are refreshed from error-corrected
+    weights mid-stream, so they can NOT be recovered from the output.
+    """
     w = np.array(w, dtype=np.float64, copy=True)
     d_out, d_in = w.shape
     hinv = _prepare_hinv(np.asarray(c, np.float64))
     dead = np.diag(np.asarray(c)) == 0
     w[:, dead] = 0.0
 
+    if return_qparams:
+        n_groups = (d_in + group_size - 1) // group_size
+        codes = np.zeros((d_out, d_in))
+        g_scale = np.ones((d_out, n_groups))
+        g_zero = np.zeros((d_out, n_groups))
     scale = zero = None
     qmax = 2 ** bits - 1
     for i1 in range(0, d_in, blocksize):
@@ -55,16 +67,45 @@ def quantize_weight(w, c, bits: int, group_size: int = 128,
                      w[:, i2:g_end]], axis=1) if g_end > i2 else \
                     w1[:, j:j + (g_end - col_idx)]
                 scale, zero, qmax = _group_qparams(g_block, bits)
+                if return_qparams:
+                    gi = col_idx // group_size
+                    g_scale[:, gi] = scale
+                    g_zero[:, gi] = zero
             wj = w1[:, j]
             d = hinv1[j, j]
-            q = _quant_col(wj, scale, zero, qmax)
+            q, q_int = _quant_col(wj, scale, zero, qmax)
             q1[:, j] = q
+            if return_qparams:
+                codes[:, col_idx] = q_int
             err = (wj - q) / d
             w1[:, j:] -= np.outer(err, hinv1[j, j:])
             err1[:, j] = err
         w[:, i1:i2] = q1
         w[:, i2:] -= err1 @ hinv[i1:i2, i2:]
-    return w.astype(np.float32)
+    out = w.astype(np.float32)
+    if return_qparams:
+        return out, codes, g_scale, g_zero
+    return out
+
+
+@_registry.register("gptq", spec_cls=_QuantSpec)
+def _compress(w, stats, spec):
+    import jax.numpy as jnp
+
+    from repro.core import calibration as calib
+    from repro.quant import QTensor
+    c = calib.covariance(stats, damp=spec.damp)
+    g = spec.group_for(w.shape[1])
+    _, codes, g_scale, g_zero = quantize_weight(
+        np.asarray(w, np.float32), np.asarray(c, np.float64), spec.bits, g,
+        return_qparams=True)
+    # Pack GPTQ's OWN codes/grids (they're refreshed mid-stream and can't be
+    # recovered from the dense output); theta = dequant(codes) keeps the
+    # checkpoint and serving path consistent with the artifact.
+    qt = QTensor.from_codes(jnp.asarray(codes, jnp.int32),
+                            jnp.asarray(g_scale, jnp.float32),
+                            jnp.asarray(g_zero, jnp.float32), spec.bits, g)
+    return _registry.CompressResult(theta=qt.dequant(), qtensor=qt)
 
 
 __all__ = ["quantize_weight"]

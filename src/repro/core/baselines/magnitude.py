@@ -5,7 +5,8 @@ import functools
 
 import jax
 
-from repro.core import projections as proj
+from repro.core import projections as proj, registry
+from repro.core.specs import PruneSpec
 
 
 @functools.partial(jax.jit, static_argnames=("k", "per_row"))
@@ -15,6 +16,12 @@ def prune_weight(w: jax.Array, k: int, per_row: bool = True) -> jax.Array:
     if per_row:
         return proj.topk_row(w, k)
     return proj.topk_matrix(w, k * w.shape[0])
+
+
+@registry.register("magnitude", spec_cls=PruneSpec)
+def _compress(w, stats, spec):
+    theta = prune_weight(w, spec.k_for(w.shape[1]))
+    return registry.CompressResult(theta=theta, mask=theta != 0)
 
 
 __all__ = ["prune_weight"]

@@ -6,13 +6,24 @@ import functools
 
 import jax
 
-from repro.core import projections as proj
+from repro.core import projections as proj, registry
+from repro.core.specs import QuantSpec
+from repro.quant import QTensor
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "group_size"))
 def quantize_weight(w: jax.Array, bits: int, group_size: int = 128) -> jax.Array:
     """Group-wise asymmetric min/max quantize-dequantize of W itself."""
     return proj.quant_project(w, bits, group_size)
+
+
+@registry.register("rtn", spec_cls=QuantSpec)
+def _compress(w, stats, spec):
+    g = spec.group_for(w.shape[1])
+    # from_dense(w) computes the same min/max grid as quantize_weight, so
+    # qt.dequant() IS the RTN weight — codes are the source of truth.
+    qt = QTensor.from_dense(w, spec.bits, g)
+    return registry.CompressResult(theta=qt.dequant(), qtensor=qt)
 
 
 __all__ = ["quantize_weight"]

@@ -8,7 +8,9 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.core import calibration as calib, registry
 from repro.core.baselines import awq, wanda
+from repro.core.specs import JointSpec
 
 
 def wanda_then_awq(w, c, act_mean_abs, k: int, bits: int = 4,
@@ -23,6 +25,22 @@ def awq_then_wanda(w, c, act_mean_abs, k: int, bits: int = 4,
                    group_size: int = 128):
     q = awq.quantize_weight(w, c, act_mean_abs, bits, group_size)
     return wanda.prune_weight(q, c, k)
+
+
+def _adapter(pipeline):
+    def _compress(w, stats, spec):
+        c = calib.covariance(stats, damp=spec.damp)
+        am = calib.act_mean_abs(stats)
+        theta = pipeline(w, c, am, spec.k_for(w.shape[1]), spec.bits,
+                         spec.group_for(w.shape[1]))
+        # AWQ's per-channel scale is folded into theta, so a plain-grid
+        # repack would undo it — these baselines stay dense (mask only).
+        return registry.CompressResult(theta=theta, mask=theta != 0)
+    return _compress
+
+
+registry.register("wanda_awq", spec_cls=JointSpec)(_adapter(wanda_then_awq))
+registry.register("awq_wanda", spec_cls=JointSpec)(_adapter(awq_then_wanda))
 
 
 __all__ = ["wanda_then_awq", "awq_then_wanda"]

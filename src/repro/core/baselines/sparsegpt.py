@@ -14,6 +14,9 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.core import registry as _registry
+from repro.core.specs import PruneSpec as _PruneSpec
+
 
 def _prepare_hinv(c: np.ndarray, damp_frac: float = 0.01) -> np.ndarray:
     """H = C (scale-free), dead-column guard, 1% dampening, then the
@@ -79,3 +82,15 @@ def prune_weight(w, c, k: int, blocksize: int = 128) -> np.ndarray:
 
 
 __all__ = ["prune_weight"]
+
+
+@_registry.register("sparsegpt", spec_cls=_PruneSpec)
+def _compress(w, stats, spec):
+    import jax.numpy as jnp
+
+    from repro.core import calibration as calib
+    c = calib.covariance(stats, damp=spec.damp)
+    theta = jnp.asarray(prune_weight(
+        np.asarray(w, np.float32), np.asarray(c, np.float64),
+        spec.k_for(w.shape[1])))
+    return _registry.CompressResult(theta=theta, mask=theta != 0)

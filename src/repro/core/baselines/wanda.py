@@ -11,7 +11,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core import projections as proj
+from repro.core import calibration as calib, projections as proj, registry
+from repro.core.specs import PruneSpec
 
 
 def scores(w: jax.Array, c: jax.Array) -> jax.Array:
@@ -40,6 +41,16 @@ def prune_weight_n_m(w: jax.Array, c: jax.Array, n: int = 2, m: int = 4) -> jax.
     _, idx = jax.lax.top_k(g_s, n)
     mask = jax.nn.one_hot(idx, m, dtype=bool).any(axis=-2)
     return (w.reshape(d_out, d_in // m, m) * mask).reshape(d_out, d_in)
+
+
+@registry.register("wanda", spec_cls=PruneSpec)
+def _compress(w, stats, spec):
+    c = calib.covariance(stats, damp=spec.damp)
+    if spec.nm is not None:
+        theta = prune_weight_n_m(w, c, *spec.nm)
+    else:
+        theta = prune_weight(w, c, spec.k_for(w.shape[1]))
+    return registry.CompressResult(theta=theta, mask=theta != 0)
 
 
 __all__ = ["scores", "prune_weight", "prune_weight_n_m"]

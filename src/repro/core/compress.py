@@ -6,44 +6,46 @@ GPTQ/SparseGPT/AWQ reference pipelines the paper compares against:
   1. embed the calibration batches,
   2. per block: capture every linear's input activations → fold into
      per-linear CalibStats (per-*expert* stats for MoE blocks),
-  3. compress each linear with the selected method,
+  3. compress each linear with the method its policy rule selects
+     (dispatched through :mod:`repro.core.registry` — no string if/elif),
   4. re-run the block with compressed weights to produce the next block's
      (error-propagated) inputs.
 
 Weights are stored (d_in, d_out); the compression math runs in paper
 orientation (d_out, d_in) — transposed at this boundary only.
+
+``compress_model`` accepts a :class:`repro.core.specs.Policy` (per-layer
+patterns → typed specs), a bare spec (applied everywhere), or the legacy
+flat :class:`CompressionConfig`, and returns ``(params, CompressionReport)``
+where the report carries per-layer metrics AND the structured artifacts
+(masks, packed ``QTensor`` codes) that the packed-checkpoint path
+materializes for serving.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import awp, calibration as calib
-from repro.core import projections as proj
-from repro.core.baselines import (magnitude, wanda, sparsegpt, rtn, awq, gptq,
-                                  sequential)
+from repro.core import awp, calibration as calib, registry
+from repro.core import baselines  # noqa: F401  — registers built-in methods
+from repro.core.specs import (CompressSpec, Policy, effective_group,
+                              qualified_name)
 
-METHODS = ("magnitude", "wanda", "sparsegpt", "awp_prune", "awp_prune_nm",
-           "rtn", "awq", "gptq", "awp_quant", "awp_quant_scaled",
-           "awp_joint", "wanda_awq", "awq_wanda")
-
-
-def effective_group(d_in: int, group_size: int) -> int:
-    """Largest divisor of d_in that is ≤ group_size (tiny models have
-    d_in < 128; production dims are multiples of 128)."""
-    g = min(group_size, d_in)
-    while d_in % g:
-        g -= 1
-    return g
+METHODS = registry.available()
 
 
 @dataclasses.dataclass
 class CompressionConfig:
+    """Legacy flat config — one method/ratio/bits for every linear.
+
+    Kept as a thin front-end: it converts to a single-rule :class:`Policy`
+    (``as_policy``). New code should build Policy/specs directly.
+    """
     method: str = "awp_prune"
     ratio: float = 0.5           # pruning ratio p (fraction zeroed)
     bits: int = 4
@@ -51,50 +53,50 @@ class CompressionConfig:
     damp: float = 0.01           # covariance damping (MoE low-token guard)
     skip: tuple = ()             # linear-name substrings to leave dense
 
+    def spec(self) -> CompressSpec:
+        cls = registry.spec_cls_for(self.method)
+        fields = {f.name for f in dataclasses.fields(cls)}
+        kwargs = {k: getattr(self, k)
+                  for k in ("ratio", "bits", "group_size", "damp")
+                  if k in fields}
+        return cls(method=self.method, **kwargs)
 
-def _k_for(cfg: CompressionConfig, d_in: int) -> int:
-    return max(1, int(round((1.0 - cfg.ratio) * d_in)))
+    def as_policy(self) -> Policy:
+        # alias_only: legacy skip substrings match the SHORT layer name only
+        # ("o" must hit "wo", not the "o" in "blocks.0.…")
+        return Policy([(f"*{s}*", None, True) for s in self.skip],
+                      default=self.spec())
+
+
+PolicyLike = Union[Policy, CompressSpec, CompressionConfig]
+
+
+def as_policy(policy: PolicyLike) -> Policy:
+    if isinstance(policy, Policy):
+        return policy
+    if isinstance(policy, CompressSpec):
+        return Policy(default=policy)
+    if isinstance(policy, CompressionConfig):
+        return policy.as_policy()
+    raise TypeError(f"expected Policy/CompressSpec/CompressionConfig, "
+                    f"got {type(policy).__name__}")
 
 
 def compress_weight(w_paper: jax.Array, stats: calib.CalibStats,
-                    cfg: CompressionConfig) -> jax.Array:
-    """Compress one weight (paper orientation) with the configured method."""
-    d_in = w_paper.shape[1]
-    c = calib.covariance(stats, damp=cfg.damp)
-    am = calib.act_mean_abs(stats)
-    k = _k_for(cfg, d_in)
-    g = effective_group(d_in, cfg.group_size)
-    m = cfg.method
-    if m == "magnitude":
-        return magnitude.prune_weight(w_paper, k)
-    if m == "wanda":
-        return wanda.prune_weight(w_paper, c, k)
-    if m == "sparsegpt":
-        return jnp.asarray(sparsegpt.prune_weight(
-            np.asarray(w_paper, np.float32), np.asarray(c, np.float64), k))
-    if m == "awp_prune":
-        return awp.prune(w_paper, c, k).theta
-    if m == "awp_prune_nm":
-        return awp.prune(w_paper, c, k, nm=(2, 4)).theta
-    if m == "rtn":
-        return rtn.quantize_weight(w_paper, cfg.bits, g)
-    if m == "awq":
-        return awq.quantize_weight(w_paper, c, am, cfg.bits, g)
-    if m == "gptq":
-        return jnp.asarray(gptq.quantize_weight(
-            np.asarray(w_paper, np.float32), np.asarray(c, np.float64),
-            cfg.bits, g))
-    if m == "awp_quant":
-        return awp.quantize(w_paper, c, cfg.bits, group_size=g).theta
-    if m == "awp_quant_scaled":
-        return awp.quantize_scaled(w_paper, c, am, cfg.bits, group_size=g).theta
-    if m == "awp_joint":
-        return awp.joint(w_paper, c, k, cfg.bits, group_size=g).theta
-    if m == "wanda_awq":
-        return sequential.wanda_then_awq(w_paper, c, am, k, cfg.bits, g)
-    if m == "awq_wanda":
-        return sequential.awq_then_wanda(w_paper, c, am, k, cfg.bits, g)
-    raise ValueError(f"unknown method {cfg.method!r}")
+                    cfg: Union[CompressSpec, CompressionConfig]) -> jax.Array:
+    """Legacy single-weight entry point: dense compressed weight only."""
+    spec = cfg.spec() if isinstance(cfg, CompressionConfig) else cfg
+    if not isinstance(spec, CompressSpec):
+        raise TypeError(f"compress_weight takes one spec/config, "
+                        f"got {type(cfg).__name__}")
+    return compress_layer(w_paper, stats, spec).theta
+
+
+def compress_layer(w_paper: jax.Array, stats: calib.CalibStats,
+                   spec: CompressSpec) -> registry.CompressResult:
+    """Compress one weight (paper orientation) via the registered method."""
+    registry.validate_spec(spec)
+    return registry.get_method(spec.method)(w_paper, stats, spec)
 
 
 # ---------------------------------------------------------------------------
@@ -109,7 +111,7 @@ def _fold_captures(stats: Dict[str, Any], caps: Dict[str, jax.Array],
             continue
         if key == "moe_in":
             x = val                                     # (T, d)
-            mask = caps["moe_mask"].astype(jnp.float32) # (T, E)
+            mask = caps["moe_mask"].astype(jnp.float32)  # (T, E)
             up = caps["moe_up"]                         # (T, E, f)
             for e in range(num_experts):
                 me = mask[:, e:e + 1]
@@ -139,12 +141,16 @@ def _stats_for(stats, cap_key: str, name: str):
 # the leading dim. E.g. ("blocks","moe","wu", e) → params[...]["wu"][layer, e].
 # ---------------------------------------------------------------------------
 
-def _resolve(path, layer: Optional[int]):
+def resolve_path(path, layer: Optional[int]):
+    """(dict-key path, stacked-leaf index tuple) for one linear's path."""
     dict_path = [p for p in path if not isinstance(p, int)]
     idx = tuple(p for p in path if isinstance(p, int))
     if dict_path[0] == "blocks" and layer is not None:
         idx = (layer,) + idx
     return dict_path, idx
+
+
+_resolve = resolve_path
 
 
 def get_linear(params, path, layer: Optional[int]) -> jax.Array:
@@ -176,6 +182,11 @@ def _tree_set(params, path, layer: Optional[int], value):
     return rec(params, dict_path)
 
 
+def set_linear(params, path, layer: Optional[int], w_paper):
+    """Functional write of one PAPER-orientation (d_out, d_in) weight."""
+    return _tree_set(params, path, layer, w_paper.T)
+
+
 # ---------------------------------------------------------------------------
 # the driver
 # ---------------------------------------------------------------------------
@@ -188,15 +199,84 @@ class LayerReport:
     loss_after: float            # normalized activation-aware loss
     sparsity: float
     seconds: float
+    method: str = ""
+    qualname: str = ""
+
+
+@dataclasses.dataclass
+class LayerArtifact:
+    """One layer's structured compression output, addressable for write-back.
+
+    Inside a CompressionReport the result's ``theta`` is None — the dense
+    weight lives in the returned params; only mask/qtensor/metrics are kept
+    (holding every theta would double peak memory at production scale)."""
+    name: str                    # qualified name, e.g. "blocks.3.attn.wq"
+    path: tuple                  # param-tree path
+    layer: Optional[int]         # stacked-block index (None for shared)
+    spec: CompressSpec
+    result: registry.CompressResult
+
+
+@dataclasses.dataclass
+class CompressionReport:
+    """Per-layer metrics + artifacts. Iterates like the old report list."""
+    layers: List[LayerReport] = dataclasses.field(default_factory=list)
+    artifacts: Dict[str, LayerArtifact] = dataclasses.field(default_factory=dict)
+    policy: Optional[Policy] = None
+
+    def __iter__(self):
+        return iter(self.layers)
+
+    def __len__(self):
+        return len(self.layers)
+
+    def __getitem__(self, i):
+        return self.layers[i]
+
+    def packed_layers(self) -> Dict[str, LayerArtifact]:
+        """Artifacts that carry packed QTensor codes (quantizing methods)."""
+        return {n: a for n, a in self.artifacts.items()
+                if a.result.qtensor is not None}
+
+    def mean_loss(self) -> float:
+        return float(np.mean([r.loss_after for r in self.layers])) \
+            if self.layers else 0.0
+
+    def mean_sparsity(self) -> float:
+        return float(np.mean([r.sparsity for r in self.layers])) \
+            if self.layers else 0.0
+
+    def summary(self) -> str:
+        by_method: Dict[str, int] = {}
+        for r in self.layers:
+            by_method[r.method] = by_method.get(r.method, 0) + 1
+        packed = self.packed_layers()
+        packed_bytes = sum(a.result.qtensor.nbytes() for a in packed.values())
+        lines = [f"{len(self.layers)} layers compressed "
+                 f"({', '.join(f'{m}×{n}' for m, n in sorted(by_method.items()))})",
+                 f"mean loss {self.mean_loss():.4f}  "
+                 f"mean sparsity {self.mean_sparsity():.2f}"]
+        if packed:
+            lines.append(f"{len(packed)} packed QTensors, "
+                         f"{packed_bytes / 1e6:.2f} MB")
+        return "\n".join(lines)
 
 
 def compress_model(model, params, calib_batches: List[dict],
-                   cfg: CompressionConfig, verbose: bool = False):
-    """Compress every linear of every block. Returns (params, reports)."""
+                   policy: PolicyLike, verbose: bool = False):
+    """Compress every linear of every block per the policy.
+
+    Returns ``(params, CompressionReport)``.
+    """
+    policy = as_policy(policy)
+    # fail fast: unknown methods / method-spec mismatches surface here, not
+    # minutes into the block loop
+    for s in [r.spec for r in policy.rules] + [policy.default]:
+        if s is not None:
+            registry.validate_spec(s)
     num_experts = getattr(model.cfg, "num_experts", 0)
     hs = [model.embed(params, b) for b in calib_batches]
-    reports: List[LayerReport] = []
-    skip = tuple(cfg.skip)
+    report = CompressionReport(policy=policy)
 
     for i in range(model.num_blocks()):
         # 1) capture calibration statistics for this block
@@ -204,29 +284,45 @@ def compress_model(model, params, calib_batches: List[dict],
         for h in hs:
             _, caps = model.block_apply_one(params, i, h, capture=True)
             _fold_captures(stats, caps, num_experts)
-        # 2) compress each linear
+        # 2) compress each linear per its policy rule
         for (name, path, cap_key) in model.block_linears(i):
-            if any(s in name for s in skip):
-                continue
             layer = i if path[0] == "blocks" else None
-            w = get_linear(params, path, layer)
+            qname = qualified_name(path, layer)
+            spec = policy.spec_for(qname, name)
+            if spec is None:
+                continue                     # rule says: leave dense
             st = _stats_for(stats, cap_key, name)
             if float(st.n) < 1:
                 continue                     # expert never routed: keep dense
+            w = get_linear(params, path, layer)
             t0 = time.time()
-            w_new = compress_weight(w, st, cfg)
-            c = calib.covariance(st, damp=cfg.damp)
-            loss = float(awp.activation_loss(w, w_new, c))
-            sp = float((np.asarray(w_new) == 0).mean())
-            reports.append(LayerReport(i, name, 0.0, loss, sp,
-                                       time.time() - t0))
+            res = compress_layer(w, st, spec)
+            c = calib.covariance(st, damp=spec.damp)
+            loss = float(awp.activation_loss(w, res.theta, c))
+            if res.loss is None:
+                res.loss = loss
+            sp = float((np.asarray(res.theta) == 0).mean())
+            report.layers.append(LayerReport(i, name, 0.0, loss, sp,
+                                             time.time() - t0,
+                                             method=spec.method,
+                                             qualname=qname))
+            report.artifacts[qname] = LayerArtifact(qname, tuple(path), layer,
+                                                    spec, res)
             if verbose:
-                print(f"  block {i} {name}: loss={loss:.4f} sparsity={sp:.2f}")
-            params = _tree_set(params, path, layer, w_new.T)
+                print(f"  block {i} {name} [{spec.method}]: "
+                      f"loss={loss:.4f} sparsity={sp:.2f}")
+            params = _tree_set(params, path, layer, res.theta.T)
+            # written back: drop theta, host the mask — the report must not
+            # pin a second copy of the model (or per-layer masks) on device
+            res.theta = None
+            if res.mask is not None:
+                res.mask = np.asarray(res.mask)
         # 3) propagate compressed activations to the next block
         hs = [model.block_apply_one(params, i, h)[0] for h in hs]
-    return params, reports
+    return params, report
 
 
-__all__ = ["CompressionConfig", "compress_model", "compress_weight",
-           "LayerReport", "METHODS", "effective_group", "get_linear"]
+__all__ = ["CompressionConfig", "CompressionReport", "LayerArtifact",
+           "LayerReport", "METHODS", "as_policy", "compress_layer",
+           "compress_model", "compress_weight", "effective_group",
+           "get_linear", "resolve_path", "set_linear"]

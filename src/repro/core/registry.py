@@ -1,0 +1,129 @@
+"""Method registry: pluggable compression methods with a uniform signature.
+
+A *method* is any callable
+
+    compress(w_paper, stats, spec) -> CompressResult
+
+where ``w_paper`` is the weight in paper orientation (d_out, d_in),
+``stats`` the layer's :class:`repro.core.calibration.CalibStats`, and
+``spec`` a :class:`repro.core.specs.CompressSpec`. Register one with
+
+    from repro.core import registry
+    from repro.core.specs import QuantSpec
+
+    @registry.register("my_method", spec_cls=QuantSpec)
+    def my_method(w, stats, spec):
+        return registry.CompressResult(theta=...)
+
+and ``compress_model`` dispatches to it through any policy naming it —
+no driver edits. ``spec_cls`` records which spec type the method expects
+(used to build specs from legacy flat configs and CLI flags).
+
+:class:`CompressResult` keeps the structured artifacts the old string
+dispatch threw away: the sparsity mask, packed ``QTensor`` codes for
+quantizing methods, and per-layer loss/iteration counts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Protocol, Tuple
+
+from repro.core.specs import CompressSpec, JointSpec
+
+
+@dataclasses.dataclass
+class CompressResult:
+    """What one method produced for one layer.
+
+    ``theta`` is always the dense compressed weight (paper orientation) —
+    the value written back into the param tree. The artifacts ride along:
+
+    * ``mask``    — boolean keep-mask (pruning / joint methods);
+    * ``qtensor`` — packed :class:`repro.quant.QTensor` whose ``dequant()``
+      equals ``theta`` (quantizing methods) — what the packed checkpoint
+      stores and decode-shape serving reads;
+    * ``loss``    — normalized activation-aware loss (filled by the driver
+      if the method leaves it None);
+    * ``iters``   — PGD iterations actually run;
+    * ``aux``     — anything method-specific (grad norms, traces, α…).
+    """
+    theta: Any
+    mask: Optional[Any] = None
+    qtensor: Optional[Any] = None
+    loss: Optional[float] = None
+    iters: Optional[int] = None
+    aux: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+class Method(Protocol):
+    def __call__(self, w_paper: Any, stats: Any,
+                 spec: CompressSpec) -> CompressResult: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class _Entry:
+    fn: Method
+    spec_cls: type
+
+
+_REGISTRY: Dict[str, _Entry] = {}
+_BUILTINS_LOADED = False
+
+
+def register(name: str, *, spec_cls: type = JointSpec) -> Callable[[Method], Method]:
+    """Decorator: register ``fn`` as compression method ``name``."""
+    def deco(fn: Method) -> Method:
+        _REGISTRY[name] = _Entry(fn=fn, spec_cls=spec_cls)
+        return fn
+    return deco
+
+
+def _load_builtins() -> None:
+    """Import the modules that register the built-in methods (idempotent)."""
+    global _BUILTINS_LOADED
+    if _BUILTINS_LOADED:
+        return
+    import repro.core.awp        # noqa: F401  (registers awp_*)
+    import repro.core.baselines  # noqa: F401  (registers the baselines)
+    _BUILTINS_LOADED = True      # only after both imports succeeded
+
+
+def _lookup(name: str) -> _Entry:
+    if name not in _REGISTRY:
+        _load_builtins()
+    if name not in _REGISTRY:
+        raise ValueError(
+            f"unknown compression method {name!r}; registered methods: "
+            f"{', '.join(available())}")
+    return _REGISTRY[name]
+
+
+def get_method(name: str) -> Method:
+    return _lookup(name).fn
+
+
+def spec_cls_for(name: str) -> type:
+    return _lookup(name).spec_cls
+
+
+def validate_spec(spec: CompressSpec) -> None:
+    """Fail fast on method/spec mismatches (duck-typed: any spec carrying
+    the registered spec class's fields is accepted, e.g. a JointSpec can
+    drive a PruneSpec method)."""
+    cls = _lookup(spec.method).spec_cls
+    missing = [f.name for f in dataclasses.fields(cls)
+               if not hasattr(spec, f.name)]
+    if missing:
+        raise TypeError(
+            f"method {spec.method!r} expects a {cls.__name__} "
+            f"(got {type(spec).__name__}, missing fields: "
+            f"{', '.join(missing)})")
+
+
+def available() -> Tuple[str, ...]:
+    _load_builtins()
+    return tuple(sorted(_REGISTRY))
+
+
+__all__ = ["CompressResult", "Method", "register", "get_method",
+           "spec_cls_for", "validate_spec", "available"]

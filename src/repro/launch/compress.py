@@ -3,40 +3,67 @@
   PYTHONPATH=src python -m repro.launch.compress --arch llama2-7b --tiny \
       --method awp_prune --ratio 0.6 --ckpt results/train_ckpt
 
-Loads a trained checkpoint (or trains briefly if absent), runs the
-sequential layer-wise compression with the chosen method, reports per-layer
-reconstruction losses + perplexity before/after, and saves the compressed
-checkpoint.
+Per-layer policies come from ``--policy`` (inline JSON or @file), e.g.
+
+  --policy '{"rules": [["blocks.0.*", null],
+                       ["*.attn.*", {"kind": "QuantSpec", "bits": 8}],
+                       ["*.mlp.*",  {"kind": "QuantSpec", "bits": 4}]]}'
+
+Loads a trained checkpoint (or compresses random init if absent), runs the
+sequential layer-wise compression through the method registry, reports
+per-layer reconstruction losses + perplexity before/after, and saves the
+compressed checkpoint — packed QTensor codes included with ``--save-packed``.
 """
 from __future__ import annotations
 
 import argparse
-import os
+import json
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.checkpoint import CheckpointManager, save_checkpoint
+from repro.checkpoint import (CheckpointManager, save_checkpoint,
+                              save_packed_checkpoint)
 from repro.configs import get_config, get_tiny_config
-from repro.core.compress import METHODS, CompressionConfig, compress_model
-from repro.core import metrics
+from repro.core import metrics, registry
+from repro.core.compress import CompressionConfig, compress_model
+from repro.core.specs import Policy
 from repro.data import DataConfig, ZipfMarkov, calibration_batches
 from repro.models import build_model
+
+
+def build_policy(args) -> "Policy | CompressionConfig":
+    if args.policy:
+        text = args.policy
+        if text.startswith("@"):
+            with open(text[1:]) as f:
+                text = f.read()
+        return Policy.from_dict(json.loads(text))
+    return CompressionConfig(method=args.method, ratio=args.ratio,
+                             bits=args.bits, group_size=args.group_size,
+                             skip=tuple(args.skip))
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama2-7b")
     ap.add_argument("--tiny", action="store_true")
-    ap.add_argument("--method", default="awp_prune", choices=list(METHODS))
+    ap.add_argument("--method", default="awp_prune",
+                    choices=list(registry.available()))
     ap.add_argument("--ratio", type=float, default=0.5)
     ap.add_argument("--bits", type=int, default=4)
     ap.add_argument("--group-size", type=int, default=128)
+    ap.add_argument("--skip", nargs="*", default=(),
+                    help="layer-name patterns to leave dense")
+    ap.add_argument("--policy", default="",
+                    help="per-layer policy as JSON (or @file.json); "
+                         "overrides --method/--ratio/--bits")
     ap.add_argument("--calib-batches", type=int, default=4)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--ckpt", default="results/train_ckpt")
     ap.add_argument("--out", default="results/compressed_ckpt")
+    ap.add_argument("--save-packed", action="store_true",
+                    help="store quantized layers as packed QTensor codes")
     args = ap.parse_args()
 
     cfg = get_tiny_config(args.arch) if args.tiny else get_config(args.arch)
@@ -66,17 +93,22 @@ def main():
             (jnp.asarray(t), jnp.asarray(l)) for t, l in eval_batches])
 
     before = ppl(params)
-    ccfg = CompressionConfig(method=args.method, ratio=args.ratio,
-                             bits=args.bits, group_size=args.group_size)
-    cp, reports = compress_model(model, params, calib, ccfg, verbose=True)
+    policy = build_policy(args)
+    cp, report = compress_model(model, params, calib, policy, verbose=True)
     after = ppl(cp)
-    sp = float(np.mean([r.sparsity for r in reports]))
-    loss = float(np.mean([r.loss_after for r in reports]))
-    print(f"[compress] method={args.method} ratio={args.ratio} bits={args.bits}")
-    print(f"[compress] mean recon loss={loss:.4f} mean sparsity={sp:.2f}")
+    print("[compress] " + report.summary().replace("\n", "\n[compress] "))
     print(f"[compress] perplexity {before:.3f} -> {after:.3f}")
-    save_checkpoint(args.out, 0, {"params": cp})
-    print(f"[compress] wrote {args.out}")
+    if args.save_packed and report.packed_layers():
+        path = save_packed_checkpoint(args.out, 0, cp, report)
+        print(f"[compress] wrote packed checkpoint {path} "
+              f"(serve with --packed)")
+    else:
+        if args.save_packed:
+            print("[compress] WARNING: no quantized artifacts to pack "
+                  "(pruning-only policy?) — writing a dense checkpoint; "
+                  "serve it WITHOUT --packed")
+        save_checkpoint(args.out, 0, {"params": cp})
+        print(f"[compress] wrote {args.out}")
 
 
 if __name__ == "__main__":

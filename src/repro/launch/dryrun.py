@@ -28,6 +28,8 @@ import sys
 import time
 import traceback
 
+from repro import compat
+
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                            "results", "dryrun")
 
@@ -92,7 +94,7 @@ def _build_lowered(cfg, mesh, shape, kind, *, unroll: bool, n_micro: int):
         b_sh = {k: NamedSharding(mesh, rules.spec(("batch",) + (None,) * (len(v.shape) - 1),
                                                   v.shape))
                 for k, v in b_sds.items()}
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             lowered = jax.jit(step_fn, in_shardings=(state_sh, b_sh),
                               donate_argnums=0).lower(state_sds, b_sds)
         tokens = shape.global_batch * shape.seq_len
@@ -122,7 +124,7 @@ def _build_lowered(cfg, mesh, shape, kind, *, unroll: bool, n_micro: int):
         args_sds = (param_sds, tok_sds, cache_sds)
         args_sh = (p_shardings, tok_sh, c_shardings)
         tokens = shape.global_batch
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         lowered = jax.jit(serve_step, in_shardings=args_sh,
                           donate_argnums=2).lower(*args_sds)
     return lowered, 2.0 * n_active * tokens
@@ -309,13 +311,13 @@ def _lower_compress(cfg, mesh, chips) -> dict:
             (in_w, in_c), out_sh = dist.rowsharded_shardings(v2_rules, d_out)
         else:
             (in_w, in_c), out_sh = dist.rowsharded_shardings(rules, d_out)
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             lowered = jax.jit(unrolled_run, in_shardings=(in_w, in_c),
                               out_shardings=out_sh).lower(w_sds, c_sds)
         schedule = f"row-sharded (zero-collective, {sched})"
     else:
         run = dist.awp_prune_colsharded_fn(k, eta, iters, rules)
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             lowered = jax.jit(run).lower(w_sds, c_sds)
         schedule = "column-sharded C (psum per iteration)"
     compiled = lowered.compile()

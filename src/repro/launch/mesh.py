@@ -5,20 +5,27 @@ from __future__ import annotations
 import jax
 
 
+def _make(shape, axes):
+    """jax.make_mesh across versions: AxisType (and the axis_types kwarg)
+    only exist on newer jax; older releases default to auto axes anyway."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16×16 = 256 chips per pod (TPU v5e pod slice); multi-pod adds a
     leading pod axis (2×16×16 = 512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make(shape, axes)
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh helper for tests/examples (auto axis types)."""
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make(shape, axes)
 
 
 __all__ = ["make_production_mesh", "make_mesh"]

@@ -3,6 +3,10 @@ weights (what the paper compresses models FOR).
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama2-7b --tiny \
       --batch 8 --prompt-len 32 --gen 32 [--ckpt results/compressed_ckpt]
+
+With ``--packed`` the checkpoint is a packed QTensor checkpoint (written by
+``repro.launch.compress --save-packed``): the quantized layers are loaded
+straight from their integer codes — no dense floats are re-quantized.
 """
 from __future__ import annotations
 
@@ -27,12 +31,26 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--ckpt", default="")
+    ap.add_argument("--packed", action="store_true",
+                    help="--ckpt is a packed QTensor checkpoint")
     args = ap.parse_args()
+    if args.packed and not args.ckpt:
+        ap.error("--packed requires --ckpt")
 
     cfg = get_tiny_config(args.arch) if args.tiny else get_config(args.arch)
     model = build_model(cfg, remat=False)
     params = model.init(jax.random.PRNGKey(0))
-    if args.ckpt:
+    if args.ckpt and args.packed:
+        params, qts, manifest = CheckpointManager(
+            args.ckpt).restore_latest_packed(params)
+        if params is None:
+            raise SystemExit(f"[serve] no checkpoint under {args.ckpt}")
+        dense = sum(int(np.prod(qt.shape)) * 4 for qt in qts.values())
+        packed_b = sum(qt.nbytes() for qt in qts.values())
+        print(f"[serve] loaded packed checkpoint step {manifest['step']}: "
+              f"{len(qts)} QTensor layers, "
+              f"{dense / 1e6:.1f}MB dense -> {packed_b / 1e6:.1f}MB packed")
+    elif args.ckpt:
         restored, step = CheckpointManager(args.ckpt).restore_latest(
             {"params": params})
         if restored is not None:

@@ -24,6 +24,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
 from repro.sharding import ShardingRules, NO_RULES, hint
@@ -215,7 +216,7 @@ def moe_apply_a2a(p, x, cfg: ModelConfig, rules: ShardingRules) -> jax.Array:
 
     x_spec = P(dp, tp, None)
     ew_spec = P(tp, None, None)
-    y = jax.shard_map(local, mesh=mesh,
+    y = compat.shard_map(local, mesh=mesh,
                       in_specs=(x_spec, P(None, None), ew_spec, ew_spec,
                                 ew_spec if has_gate else P()),
                       out_specs=x_spec,

@@ -1,14 +1,20 @@
 """Packed quantized-weight storage — the serving payoff of compression.
 
 ``QTensor`` stores AWP/RTN/AWQ-quantized weights as packed integers
-(int4 → two nibbles per uint8) + per-(row, group) scale/zero, a 4-8× memory
-saving that decode-shape serving reads instead of the dense weight. The
-fused dequant-matmul lives in ``repro.kernels.dequant_matmul`` (Pallas);
-``QTensor.dequant()`` is its reference.
+(int4 → two nibbles per uint8; other widths ≤ 8 bits as uint8 codes) +
+per-(row, group) scale/zero, a 4-8× memory saving that decode-shape serving
+reads instead of the dense weight. The fused dequant-matmul lives in
+``repro.kernels.dequant_matmul`` (Pallas); ``QTensor.dequant()`` is its
+reference.
+
+AWQ-style methods quantize in a per-input-channel scaled space
+(W' = W·diag(s)); the optional ``col_scale`` field stores that s so the
+codes live on the scaled grid and ``dequant()`` folds it back — packing
+stays exact instead of re-quantizing on an unscaled grid.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -34,36 +40,87 @@ def unpack_int4(packed: jax.Array) -> jax.Array:
 
 class QTensor(NamedTuple):
     """Quantized (d_out, d_in) weight, paper orientation."""
-    packed: jax.Array      # (d_out, d_in//2) uint8 for bits=4; int8 codes else
+    packed: jax.Array      # (d_out, d_in//2) uint8 for bits=4;
+                           # (d_out, d_in) uint8 codes for bits≤8, int32 above
     scale: jax.Array       # (d_out, n_groups) f32
     zero: jax.Array        # (d_out, n_groups) f32
     bits: int
     group_size: int
     shape: tuple           # logical (d_out, d_in)
+    col_scale: Optional[jax.Array] = None   # (d_in,) f32 — AWQ-style s
 
     @staticmethod
-    def from_dense(w: jax.Array, bits: int = 4, group_size: int = 128) -> "QTensor":
-        qp = proj.quant_params(w, bits, group_size)
+    def from_codes(codes: jax.Array, scale: jax.Array, zero: jax.Array,
+                   bits: int, group_size: int,
+                   col_scale: Optional[jax.Array] = None) -> "QTensor":
+        """Pack pre-computed integer codes (d_out, d_in) + per-(row, group)
+        scale/zero — for methods (GPTQ) whose grids aren't re-derivable from
+        the dequantized weight."""
+        shape = tuple(codes.shape)
+        if bits == 4 and shape[1] % 2 == 0:
+            packed = pack_int4(codes)
+        elif bits <= 8:
+            # codes span [0, 2^bits-1] — int8 would wrap at bits=8; odd
+            # d_in at bits=4 also lands here (nibble packing needs pairs)
+            packed = codes.astype(jnp.uint8)
+        else:
+            packed = codes.astype(jnp.int32)
+        return QTensor(packed=packed, scale=scale, zero=zero, bits=bits,
+                       group_size=group_size, shape=shape,
+                       col_scale=col_scale)
+
+    @staticmethod
+    def from_dense(w: jax.Array, bits: int = 4, group_size: int = 128,
+                   col_scale: Optional[jax.Array] = None) -> "QTensor":
+        """Quantize ``w`` (or ``w·diag(col_scale)`` when given) onto the
+        per-(row, group) min/max grid and pack the codes."""
+        ws = w if col_scale is None else w * col_scale[None, :]
+        qp = proj.quant_params(ws, bits, group_size)
         codes = qp.q.reshape(w.shape[0], -1)           # (d_out, d_in)
-        packed = pack_int4(codes) if bits == 4 else codes.astype(jnp.int8)
-        return QTensor(packed=packed, scale=qp.scale[..., 0], zero=qp.zero[..., 0],
-                       bits=bits, group_size=group_size, shape=tuple(w.shape))
+        return QTensor.from_codes(codes, qp.scale[..., 0], qp.zero[..., 0],
+                                  bits, group_size, col_scale=col_scale)
+
+    def codes(self) -> jax.Array:
+        """Unpacked integer codes, (d_out, d_in)."""
+        if self.bits == 4 and self.packed.shape[-1] * 2 == self.shape[1]:
+            return unpack_int4(self.packed)
+        return self.packed
 
     def dequant(self, dtype=jnp.float32) -> jax.Array:
         d_out, d_in = self.shape
-        codes = (unpack_int4(self.packed) if self.bits == 4
-                 else self.packed).astype(jnp.float32)
+        codes = self.codes().astype(jnp.float32)
         g = codes.reshape(d_out, -1, self.group_size)
         deq = (g - self.zero[..., None]) * self.scale[..., None]
-        return deq.reshape(d_out, d_in).astype(dtype)
+        deq = deq.reshape(d_out, d_in)
+        if self.col_scale is not None:
+            deq = deq / self.col_scale[None, :]
+        return deq.astype(dtype)
 
     def matmul(self, x: jax.Array) -> jax.Array:
         """x @ Wᵀ with on-the-fly dequant (reference; kernel in kernels/)."""
         return x @ self.dequant(x.dtype).T
 
+    def kernel_matmul(self, x: jax.Array) -> jax.Array:
+        """x @ Wᵀ via the fused Pallas dequant-matmul where supported.
+
+        The kernel handles nibble-packed int4 without a per-channel scale;
+        every other layout (bits≠4, odd d_in, AWQ-style ``col_scale``)
+        falls back to the reference ``matmul`` — callers get correct
+        results either way.
+        """
+        nibble_packed = (self.bits == 4
+                         and self.packed.shape[-1] * 2 == self.shape[1])
+        if not nibble_packed or self.col_scale is not None:
+            return self.matmul(x)
+        from repro.kernels import ops    # local: avoid import cycle
+        return ops.dequant_matmul(x, self.packed, self.scale, self.zero,
+                                  self.group_size)
+
     def nbytes(self) -> int:
         n = self.packed.size * self.packed.dtype.itemsize
         n += self.scale.size * 4 + self.zero.size * 4
+        if self.col_scale is not None:
+            n += self.col_scale.size * 4
         return n
 
 

@@ -83,6 +83,20 @@ def test_effective_group():
     assert effective_group(256, 128) == 128
     assert effective_group(96, 128) == 96
     assert effective_group(100, 64) == 50
+    # odd / prime fan-ins (O(√d) divisor search, not linear descent)
+    assert effective_group(97, 64) == 1          # prime: only trivial divisor
+    assert effective_group(99, 64) == 33
+    assert effective_group(81, 27) == 27
+    assert effective_group(1, 128) == 1
+    for d_in in (7, 30, 97, 99, 128, 121, 1009):
+        for g in (1, 2, 32, 64, 128):
+            got = effective_group(d_in, g)
+            assert d_in % got == 0 and got <= max(g, 1)
+            # matches the reference linear descent
+            ref = min(g, d_in)
+            while d_in % ref:
+                ref -= 1
+            assert got == ref, (d_in, g, got, ref)
 
 
 def test_get_linear_orientation():

@@ -1,0 +1,94 @@
+"""QTensor packing: code dtypes per bit width, round trips, col_scale."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import projections as proj
+from repro.quant import QTensor
+
+
+def test_int4_pack_roundtrip(rng):
+    w = jnp.asarray(rng.normal(size=(8, 64)), jnp.float32)
+    qt = QTensor.from_dense(w, 4, 32)
+    assert qt.packed.dtype == jnp.uint8
+    assert qt.packed.shape == (8, 32)                  # two nibbles per byte
+    np.testing.assert_allclose(np.asarray(qt.dequant()),
+                               np.asarray(proj.quant_project(w, 4, 32)),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_int8_codes_do_not_wrap(rng):
+    """bits=8 codes span [0, 255]; int8 storage wrapped them negative."""
+    w = jnp.asarray(rng.normal(size=(4, 64)) * 10, jnp.float32)
+    qt = QTensor.from_dense(w, 8, 32)
+    assert qt.packed.dtype == jnp.uint8
+    codes = np.asarray(qt.codes())
+    assert codes.min() >= 0 and codes.max() > 127      # exercises the wrap
+    np.testing.assert_allclose(np.asarray(qt.dequant()),
+                               np.asarray(proj.quant_project(w, 8, 32)),
+                               rtol=1e-5, atol=1e-5)
+    # int8 quantization of a well-scaled weight is near-lossless
+    err = float(jnp.abs(qt.dequant() - w).max())
+    width = float((w.max() - w.min()) / 255)
+    assert err <= width
+
+
+def test_every_bit_width_roundtrips(rng):
+    w = jnp.asarray(rng.normal(size=(4, 64)), jnp.float32)
+    for bits in (2, 3, 4, 8):
+        qt = QTensor.from_dense(w, bits, 32)
+        np.testing.assert_allclose(
+            np.asarray(qt.dequant()),
+            np.asarray(proj.quant_project(w, bits, 32)),
+            rtol=1e-5, atol=1e-5), bits
+
+
+def test_col_scale_packs_scaled_space(rng):
+    """AWQ-style: codes live on the W·diag(s) grid, dequant folds s back."""
+    w = jnp.asarray(rng.normal(size=(8, 64)), jnp.float32)
+    s = jnp.asarray(np.exp(rng.normal(0, 1, size=64)), jnp.float32)
+    qt = QTensor.from_dense(w, 4, 32, col_scale=s)
+    ref = proj.quant_project(w * s[None, :], 4, 32) / s[None, :]
+    np.testing.assert_allclose(np.asarray(qt.dequant()), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    assert qt.nbytes() > QTensor.from_dense(w, 4, 32).nbytes()  # s is stored
+
+
+def test_int4_odd_fanin_falls_back_to_bytes(rng):
+    """bits=4 with odd d_in can't nibble-pack; codes stay uint8."""
+    w = jnp.asarray(rng.normal(size=(4, 33)), jnp.float32)
+    qt = QTensor.from_dense(w, 4, 11)
+    assert qt.packed.dtype == jnp.uint8 and qt.packed.shape == (4, 33)
+    np.testing.assert_allclose(np.asarray(qt.dequant()),
+                               np.asarray(proj.quant_project(w, 4, 11)),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_gptq_codes_pack_exactly(rng):
+    """GPTQ's mid-stream grids can't be re-derived from its output; the
+    adapter packs the codes it actually used and dequant matches."""
+    import jax
+
+    from repro.core import calibration as calib
+    from repro.core.baselines.gptq import quantize_weight
+    from repro.core.compress import compress_layer
+    from repro.core.specs import QuantSpec
+    x = (rng.normal(size=(512, 64)) *
+         np.exp(rng.normal(0, 0.7, size=64))).astype(np.float32)
+    w = jnp.asarray(rng.normal(size=(16, 64)), jnp.float32)
+    st = calib.update(calib.init(64), jnp.asarray(x))
+    spec = QuantSpec(method="gptq", bits=4, group_size=32)
+    res = compress_layer(w, st, spec)
+    ref = quantize_weight(np.asarray(w), np.asarray(
+        calib.covariance(st, damp=spec.damp), np.float64), 4, 32)
+    # theta == dequant(artifact) by construction, == GPTQ output up to ulp
+    np.testing.assert_array_equal(np.asarray(res.theta),
+                                  np.asarray(res.qtensor.dequant()))
+    np.testing.assert_allclose(np.asarray(res.theta), ref,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_nbytes_compression_factor(rng):
+    w = jnp.asarray(rng.normal(size=(128, 256)), jnp.float32)
+    qt = QTensor.from_dense(w, 4, 128)
+    dense = w.size * 4
+    assert dense / qt.nbytes() > 6     # ~8x minus scale/zero overhead

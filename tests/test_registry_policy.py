@@ -1,0 +1,238 @@
+"""The registered-method + per-layer-policy API: registry errors, policy
+precedence/skip rules, pluggable methods through compress_model, and
+mixed-precision packed-QTensor checkpoints served with matched logits."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_tiny_config
+from repro.core import calibration as calib, registry
+from repro.core.compress import (CompressionConfig, as_policy, compress_layer,
+                                 compress_model)
+from repro.core.specs import (JointSpec, Policy, PruneSpec, QuantSpec,
+                              qualified_name, spec_from_dict)
+from repro.models import build_model, make_batch
+
+
+def _setup(arch="granite-8b", n_batches=2):
+    cfg = get_tiny_config(arch)
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    batches = [make_batch(cfg, jax.random.PRNGKey(i), 2, 24)
+               for i in range(n_batches)]
+    return cfg, model, params, batches
+
+
+def _layer_stats(rng, d_in=32, d_out=16, n=256):
+    x = rng.normal(size=(n, d_in)).astype(np.float32)
+    w = jnp.asarray(rng.normal(size=(d_out, d_in)), jnp.float32)
+    return w, calib.update(calib.init(d_in), jnp.asarray(x))
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_unknown_method_error_lists_registered(rng):
+    w, st = _layer_stats(rng)
+    with pytest.raises(ValueError) as ei:
+        compress_layer(w, st, QuantSpec(method="does_not_exist"))
+    msg = str(ei.value)
+    assert "does_not_exist" in msg
+    for name in ("awp_prune", "wanda", "rtn", "gptq"):
+        assert name in msg, msg
+
+
+def test_spec_method_mismatch_fails_fast(rng):
+    w, st = _layer_stats(rng)
+    with pytest.raises(TypeError, match="bits"):
+        compress_layer(w, st, PruneSpec(method="rtn"))   # rtn needs QuantSpec
+    # a JointSpec carries every field, so any method accepts it
+    res = compress_layer(w, st, JointSpec(method="magnitude", ratio=0.5))
+    assert res.theta is not None
+
+
+def test_compress_model_validates_policy_up_front():
+    cfg, model, params, batches = _setup(n_batches=1)
+    with pytest.raises(TypeError, match="rtn"):
+        compress_model(model, params, batches,
+                       Policy({"*.mlp.*": PruneSpec(method="rtn")}))
+
+
+def test_all_builtin_methods_registered():
+    names = registry.available()
+    assert set(names) >= {"magnitude", "wanda", "sparsegpt", "awp_prune",
+                          "awp_prune_nm", "rtn", "awq", "gptq", "awp_quant",
+                          "awp_quant_scaled", "awp_joint", "wanda_awq",
+                          "awq_wanda"}
+
+
+def test_custom_method_runs_through_compress_model():
+    """A method registered OUTSIDE core/compress.py drives the full driver."""
+    @registry.register("test_halve", spec_cls=QuantSpec)
+    def _halve(w, stats, spec):
+        return registry.CompressResult(theta=w * 0.5)
+
+    cfg, model, params, batches = _setup(n_batches=1)
+    cp, report = compress_model(model, params, batches,
+                                QuantSpec(method="test_halve"))
+    assert len(report) > 0
+    assert all(r.method == "test_halve" for r in report)
+    w0 = np.asarray(params["blocks"]["attn"]["wq"][0])
+    np.testing.assert_allclose(np.asarray(cp["blocks"]["attn"]["wq"][0]),
+                               w0 * 0.5, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# policy
+# ---------------------------------------------------------------------------
+
+def test_policy_first_match_precedence():
+    p8, p4 = QuantSpec(bits=8), QuantSpec(bits=4)
+    pol = Policy({"blocks.0.*": None,
+                  "*.attn.*": p8,
+                  "*": p4})
+    assert pol.spec_for("blocks.0.attn.wq") is None       # skip wins: first
+    assert pol.spec_for("blocks.1.attn.wq") is p8
+    assert pol.spec_for("blocks.1.mlp.wu") is p4
+    assert pol.spec_for("shared.attn.wq") is p8
+
+
+def test_policy_default_and_aliases():
+    pol = Policy({"*wq*": None}, default=PruneSpec(ratio=0.7))
+    assert pol.spec_for("blocks.3.attn.wq") is None        # qualified name
+    assert pol.spec_for("blocks.3.moe.wu.2", "moe_wu_2").ratio == 0.7
+    assert Policy().spec_for("anything") is None           # empty: all dense
+
+
+def test_policy_roundtrips_through_dict():
+    pol = Policy({"blocks.0.*": None, "*.attn.*": QuantSpec(bits=8)},
+                 default=JointSpec(ratio=0.25, bits=4))
+    pol2 = Policy.from_dict(pol.to_dict())
+    assert pol2.spec_for("blocks.0.mlp.wu") is None
+    assert pol2.spec_for("blocks.2.attn.wk") == QuantSpec(bits=8)
+    assert pol2.spec_for("other") == JointSpec(ratio=0.25, bits=4)
+    # nm tuples survive json-ish round trips
+    s = spec_from_dict(PruneSpec(nm=(2, 4)).to_dict())
+    assert s.nm == (2, 4)
+
+
+def test_legacy_config_converts_to_policy():
+    cfg = CompressionConfig(method="awp_quant", bits=3, group_size=64,
+                            skip=("wq", "wk"))
+    pol = as_policy(cfg)
+    assert pol.spec_for("blocks.0.attn.wq", "wq") is None
+    spec = pol.spec_for("blocks.0.mlp.wu", "wu")
+    assert isinstance(spec, QuantSpec) and spec.bits == 3
+
+
+def test_legacy_skip_matches_short_name_only():
+    """skip=("o",) must hit "wo" — NOT the "o" inside "blocks.0.…"."""
+    pol = as_policy(CompressionConfig(skip=("o",)))
+    assert pol.spec_for("blocks.0.attn.wo", "wo") is None
+    assert pol.spec_for("blocks.0.attn.wq", "wq") is not None
+    # alias_only rules survive serialization
+    pol2 = Policy.from_dict(pol.to_dict())
+    assert pol2.spec_for("blocks.0.attn.wq", "wq") is not None
+    assert pol2.spec_for("blocks.0.attn.wo", "wo") is None
+
+
+def test_qualified_names():
+    assert qualified_name(("blocks", "attn", "wq"), 3) == "blocks.3.attn.wq"
+    assert qualified_name(("blocks", "moe", "wu", 7), 2) == "blocks.2.moe.wu.7"
+    assert qualified_name(("shared", "attn", "wq"), None) == "shared.attn.wq"
+
+
+def test_policy_skips_block_and_mixes_methods():
+    cfg, model, params, batches = _setup(n_batches=1)
+    pol = Policy({"blocks.0.*": None,
+                  "*.attn.*": PruneSpec(method="magnitude", ratio=0.5)},
+                 default=QuantSpec(method="rtn", bits=4, group_size=32))
+    cp, report = compress_model(model, params, batches, pol)
+    names = {r.qualname for r in report}
+    assert not any(n.startswith("blocks.0.") for n in names)
+    methods = {r.qualname: r.method for r in report}
+    assert methods["blocks.1.attn.wq"] == "magnitude"
+    assert methods["blocks.1.mlp.wu"] == "rtn"
+    np.testing.assert_array_equal(
+        np.asarray(cp["blocks"]["attn"]["wq"][0]),
+        np.asarray(params["blocks"]["attn"]["wq"][0]))
+
+
+# ---------------------------------------------------------------------------
+# artifacts → packed checkpoint → serving
+# ---------------------------------------------------------------------------
+
+def test_mixed_precision_packed_checkpoint_serves_matched_logits(tmp_path):
+    """Acceptance: 8-bit attn / 4-bit MLP, block 0 skipped → packed QTensor
+    checkpoint → restored model serves the same logits as the dequantized
+    reference, bit for bit."""
+    from repro.checkpoint import load_packed_checkpoint, save_packed_checkpoint
+    cfg, model, params, batches = _setup(n_batches=2)
+    pol = Policy({"blocks.0.*": None,
+                  "*.attn.*": QuantSpec(bits=8, group_size=32),
+                  "*.mlp.*": QuantSpec(bits=4, group_size=32)})
+    cp, report = compress_model(model, params, batches, pol)
+
+    arts = report.artifacts
+    assert arts["blocks.1.attn.wq"].result.qtensor.bits == 8
+    assert arts["blocks.1.mlp.wu"].result.qtensor.bits == 4
+    assert "blocks.0.attn.wq" not in arts
+    assert len(report.packed_layers()) == len(arts)
+
+    path = save_packed_checkpoint(str(tmp_path / "ck"), 0, cp, report)
+    target = model.init(jax.random.PRNGKey(1))       # different values
+    loaded, qts, manifest = load_packed_checkpoint(path, target)
+    assert set(qts) == set(arts)
+    assert manifest["packed"]["blocks.1.attn.wq"]["bits"] == 8
+
+    for a, b in zip(jax.tree.leaves(loaded), jax.tree.leaves(cp)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    logits_packed, _ = jax.jit(model.loss)(loaded, batches[0])
+    logits_ref, _ = jax.jit(model.loss)(cp, batches[0])
+    assert float(logits_packed) == float(logits_ref)
+
+    # the policy that produced the checkpoint is recorded in the manifest
+    pol2 = Policy.from_dict(manifest["policy"])
+    assert pol2.spec_for("blocks.0.attn.wq") is None
+
+
+def test_joint_artifacts_roundtrip_with_mask(tmp_path):
+    """awp_joint emits mask + QTensor; the packed checkpoint reproduces the
+    sparse-and-quantized weight exactly."""
+    from repro.checkpoint import load_packed_checkpoint, save_packed_checkpoint
+    cfg, model, params, batches = _setup(n_batches=1)
+    cp, report = compress_model(
+        model, params, batches,
+        JointSpec(method="awp_joint", ratio=0.5, bits=4, group_size=32))
+    art = report.artifacts["blocks.0.attn.wq"]
+    assert art.result.mask is not None and art.result.qtensor is not None
+    assert float(np.asarray(art.result.mask).mean()) <= 0.55
+
+    path = save_packed_checkpoint(str(tmp_path / "ck"), 0, cp, report)
+    loaded, qts, _ = load_packed_checkpoint(
+        path, model.init(jax.random.PRNGKey(1)))
+    for a, b in zip(jax.tree.leaves(loaded), jax.tree.leaves(cp)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # sparsity survives the packed round trip
+    w = np.asarray(loaded["blocks"]["attn"]["wq"][0])
+    assert (w == 0).mean() > 0.45
+
+
+def test_dense_restore_of_packed_checkpoint_fails_loudly(tmp_path):
+    """restore_checkpoint on a packed checkpoint would return zeroed
+    quantized layers — it must refuse instead."""
+    from repro.checkpoint import (load_packed_checkpoint, restore_checkpoint,
+                                  save_packed_checkpoint)
+    cfg, model, params, batches = _setup(n_batches=1)
+    cp, report = compress_model(model, params, batches,
+                                QuantSpec(method="rtn", bits=4, group_size=32))
+    path = save_packed_checkpoint(str(tmp_path / "ck"), 0, cp, report)
+    with pytest.raises(ValueError, match="packed checkpoint"):
+        restore_checkpoint(path, model.init(jax.random.PRNGKey(1)))
+    # and the reverse: packed loader refuses a dense checkpoint
+    from repro.checkpoint import save_checkpoint
+    dense_path = save_checkpoint(str(tmp_path / "dense"), 0, cp)
+    with pytest.raises(ValueError, match="not a packed checkpoint"):
+        load_packed_checkpoint(dense_path, model.init(jax.random.PRNGKey(1)))

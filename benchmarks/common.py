@@ -1,7 +1,10 @@
 """Shared benchmark fixture: a small LM trained on the Zipf-Markov corpus so
 compression methods see *real* (trained, correlated, outlier-bearing)
 activation statistics — the paper's regime at reduced scale. Cached on disk
-so every table reuses the same model."""
+so every table reuses the same model. Plus the machine-readable
+``BENCH_*.json`` emitter every perf benchmark shares (see
+docs/performance.md for the schema conventions)."""
+import json
 import os
 import time
 
@@ -68,3 +71,25 @@ def timed(fn, *args, reps: int = 3):
         out = fn(*args)
     jax.block_until_ready(out)
     return (time.perf_counter() - t0) / reps * 1e6   # µs
+
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def emit_json(name: str, payload: dict) -> str:
+    """Write ``results/BENCH_<name>.json`` and return its path.
+
+    The machine-readable sibling of each benchmark's stdout table, so the
+    perf trajectory is diffable across PRs (and uploadable as a CI
+    artifact). Adds ``benchmark``/``backend``/``timestamp`` keys unless the
+    caller already set them."""
+    path = os.path.abspath(os.path.join(RESULTS_DIR, f"BENCH_{name}.json"))
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    payload = dict(payload)
+    payload.setdefault("benchmark", name)
+    payload.setdefault("backend", jax.default_backend())
+    payload.setdefault("timestamp",
+                       time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()))
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    return path

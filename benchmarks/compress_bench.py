@@ -1,0 +1,122 @@
+"""Compression-driver benchmark: sequential vs shape-bucketed batched engine.
+
+Runs ``compress_model`` twice over a synthetic MoE model (the regime the
+batched engine targets: E same-shape expert linears per block) — once with
+``engine="sequential"`` (one device program + host syncs per layer, the
+pre-batching driver) and once with ``engine="batched"`` (one program per
+shape bucket, syncs deferred to block boundaries) — verifies per-layer loss
+parity between the two, and emits ``results/BENCH_compress.json`` with
+layers/sec, wall-clock per block, and the speedup, so the compression-path
+perf trajectory is tracked from this PR on.
+
+The headline policy is model-wide AWP INT4 quantization (paper §4.2, the
+serving-oriented path); full mode also records AWP pruning (§4.1), whose
+inner loop is sort-compute-bound on CPU — expect parity to a mild loss
+there (the max-iter envelope; see docs/performance.md), not a win.
+
+  python -m benchmarks.compress_bench            # full
+  python -m benchmarks.compress_bench --smoke    # CI-sized
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit_json
+from repro.configs.base import ModelConfig
+from repro.core.compress import CompressionConfig, compress_model
+from repro.models import build_model, make_batch
+
+
+def bench_model(smoke: bool):
+    cfg = ModelConfig(
+        name="bench-moe", family="moe",
+        num_layers=1 if smoke else 2, d_model=64, num_heads=4,
+        num_kv_heads=2, d_ff=64, vocab_size=256, head_dim=16,
+        num_experts=8 if smoke else 32, experts_per_token=4,
+        mlp_act="silu")
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    batches = [make_batch(cfg, jax.random.PRNGKey(0), 1, 32)]
+    return cfg, model, params, batches
+
+
+def _per_block(report):
+    blocks = {}
+    for r in report:
+        blocks[r.block] = blocks.get(r.block, 0.0) + r.seconds
+    return [round(blocks[b], 4) for b in sorted(blocks)]
+
+
+def run_method(model, params, batches, ccfg, reps: int):
+    """{engine: metrics} + parity numbers for one compression config."""
+    out = {}
+    results = {}
+    for engine in ("sequential", "batched"):
+        compress_model(model, params, batches, ccfg, engine=engine)  # warm
+        best, best_rep = None, None
+        for _ in range(reps):
+            t0 = time.time()
+            cp, report = compress_model(model, params, batches, ccfg,
+                                        engine=engine)
+            dt = time.time() - t0
+            if best is None or dt < best:
+                best, best_rep = dt, (cp, report)
+        cp, report = best_rep
+        results[engine] = best_rep
+        out[engine] = {
+            "seconds": round(best, 4),
+            "layers": len(report),
+            "layers_per_sec": round(len(report) / best, 2),
+            "seconds_per_block": _per_block(report),
+        }
+    cp_s, rep_s = results["sequential"]
+    cp_b, rep_b = results["batched"]
+    ls = {r.qualname: r.loss_after for r in rep_s}
+    lb = {r.qualname: r.loss_after for r in rep_b}
+    assert set(ls) == set(lb), "engines compressed different layer sets"
+    out["max_loss_delta"] = max(abs(ls[k] - lb[k]) for k in ls)
+    out["params_max_delta"] = max(
+        float(np.max(np.abs(np.asarray(a) - np.asarray(b))))
+        for a, b in zip(jax.tree.leaves(cp_s), jax.tree.leaves(cp_b)))
+    out["speedup"] = round(out["sequential"]["seconds"]
+                           / out["batched"]["seconds"], 3)
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized: 1 block, 8 experts, quant only")
+    args = ap.parse_args(argv)
+
+    cfg, model, params, batches = bench_model(args.smoke)
+    reps = 1 if args.smoke else 3
+
+    methods = {"awp_quant": CompressionConfig(method="awp_quant", bits=4,
+                                              group_size=32)}
+    if not args.smoke:
+        methods["awp_prune"] = CompressionConfig(method="awp_prune",
+                                                 ratio=0.5)
+
+    payload = {"arch": cfg.name, "num_experts": cfg.num_experts,
+               "num_layers": cfg.num_layers, "smoke": args.smoke,
+               "methods": {}}
+    for name, ccfg in methods.items():
+        r = run_method(model, params, batches, ccfg, reps)
+        payload["methods"][name] = r
+        print(f"{name}: sequential {r['sequential']['seconds']}s, "
+              f"batched {r['batched']['seconds']}s, "
+              f"speedup {r['speedup']}x, "
+              f"max loss delta {r['max_loss_delta']:.2e}")
+        assert r["max_loss_delta"] < 1e-5, "engine parity broken"
+        assert r["params_max_delta"] < 1e-5, "engine parity broken"
+    # headline: the serving-oriented INT4 path
+    payload["speedup"] = payload["methods"]["awp_quant"]["speedup"]
+    path = emit_json("compress", payload)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,14 +1,21 @@
 """Kernel microbenchmarks: Pallas (interpret on CPU; native on TPU) vs the
 jnp oracle, with FLOP-derived throughput. On this CPU container the µs are
 indicative only — the structural payload is the HLO/roofline work in
-benchmarks/roofline_report.py."""
+benchmarks/roofline_report.py. Emits machine-readable
+``results/BENCH_kernels.json`` alongside the stdout CSV."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import timed
+from benchmarks.common import emit_json, timed
 from repro.kernels import ops
 from repro.quant.qtensor import QTensor
+
+
+def _row(name, us, derived_value, derived_unit):
+    return {"kernel": name, "us_per_call": round(us, 1),
+            "derived_value": round(derived_value, 1),
+            "derived_unit": derived_unit}
 
 
 def run():
@@ -22,33 +29,51 @@ def run():
     flops = 2 * m * k * k
     for use in (True, False):
         us = timed(lambda: ops.awp_pgd_step(w, th, c, 0.1, use_pallas=use))
-        rows.append((f"awp_pgd_step[{'pallas' if use else 'jnp'}]", us,
-                     f"{flops / us / 1e3:.1f}GFLOP/s"))
+        rows.append(_row(f"awp_pgd_step[{'pallas' if use else 'jnp'}]", us,
+                         flops / us / 1e3, "GFLOP/s"))
+
+    # batched (shape-bucket) form: B small problems as one program
+    b, mb, kb = 8, 64, 128
+    w_b = jnp.asarray(rng.normal(size=(b, mb, kb)), jnp.float32)
+    th_b = jnp.asarray(rng.normal(size=(b, mb, kb)), jnp.float32)
+    c_b = jnp.asarray(rng.normal(size=(b, kb, kb)), jnp.float32)
+    eta_b = jnp.full((b,), 0.1, jnp.float32)
+    bflops = 2 * b * mb * kb * kb
+    for use in (True, False):
+        us = timed(lambda: ops.awp_pgd_step(w_b, th_b, c_b, eta_b,
+                                            use_pallas=use))
+        rows.append(_row(
+            f"awp_pgd_step_batched[{'pallas' if use else 'jnp'}]", us,
+            bflops / us / 1e3, "GFLOP/s"))
 
     for use in (True, False):
         us = timed(lambda: ops.topk_row(w, k // 2, use_pallas=use))
-        rows.append((f"topk_row[{'pallas' if use else 'jnp'}]", us,
-                     f"{m * k / us:.0f}elem/us"))
+        rows.append(_row(f"topk_row[{'pallas' if use else 'jnp'}]", us,
+                         m * k / us, "elem/us"))
 
     for use in (True, False):
         us = timed(lambda: ops.quant_project(w, 4, 128, use_pallas=use))
-        rows.append((f"quant_proj[{'pallas' if use else 'jnp'}]", us,
-                     f"{m * k / us:.0f}elem/us"))
+        rows.append(_row(f"quant_proj[{'pallas' if use else 'jnp'}]", us,
+                         m * k / us, "elem/us"))
 
     qt = QTensor.from_dense(w, 4, 128)
     x = jnp.asarray(rng.normal(size=(64, k)), jnp.float32)
     for use in (True, False):
         us = timed(lambda: ops.dequant_matmul(x, qt.packed, qt.scale, qt.zero,
                                               128, use_pallas=use))
-        rows.append((f"dequant_matmul[{'pallas' if use else 'jnp'}]", us,
-                     f"{2 * 64 * m * k / us / 1e3:.1f}GFLOP/s"))
+        rows.append(_row(f"dequant_matmul[{'pallas' if use else 'jnp'}]", us,
+                         2 * 64 * m * k / us / 1e3, "GFLOP/s"))
     return rows
 
 
 def main():
+    rows = run()
     print("kernel,us_per_call,derived")
-    for name, us, derived in run():
-        print(f"{name},{us:.1f},{derived}")
+    for r in rows:
+        print(f"{r['kernel']},{r['us_per_call']:.1f},"
+              f"{r['derived_value']:.1f}{r['derived_unit']}")
+    path = emit_json("kernels", {"rows": rows})
+    print(f"wrote {path}")
 
 
 if __name__ == "__main__":

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import projections as proj
+from repro.kernels import awp_pgd as _pgd_kernel
 
 
 class AWPResult(NamedTuple):
@@ -45,10 +46,21 @@ class PGDConfig:
     tol: float = 1e-4                 # on ‖∇f‖_F / ‖W‖_F
     eta_scale: float = 2.0            # η = eta_scale / ‖C‖_F
     trace_loss: bool = False          # record Fig.-1 curve (forces fixed iters)
+    # Fused residual+epilogue gradient step (kernels/awp_pgd.py): Pallas on
+    # TPU, the jnp path everywhere else. ``interpret`` forces the kernel in
+    # Pallas interpret mode on any backend (equivalence testing only).
+    use_pallas: bool = False
+    interpret: bool = False
+
+    def fused_step(self) -> bool:
+        return self.use_pallas and (self.interpret
+                                    or jax.default_backend() == "tpu")
 
 
 def _eta(c: jax.Array, eta_scale: float) -> jax.Array:
-    return eta_scale / jnp.maximum(jnp.linalg.norm(c), 1e-12)
+    """η = eta_scale / ‖C‖_F; per-item (B,) for a batched (B, d, d) stack."""
+    return eta_scale / jnp.maximum(
+        jnp.linalg.norm(c, axis=(-2, -1)), 1e-12)
 
 
 def _loss(w, theta, c):
@@ -59,6 +71,46 @@ def _loss(w, theta, c):
     e = (w - theta).astype(jnp.float32)
     val = jnp.einsum("ij,jk,ik->", e, c.astype(jnp.float32), e)
     return jnp.sqrt(jnp.maximum(val, 0.0)) / jnp.maximum(jnp.linalg.norm(w), 1e-12)
+
+
+def _loss_batched(w_b, theta_b, c_b):
+    """Per-item normalized activation-aware loss over a (B, d_out, d_in) stack."""
+    e = (w_b - theta_b).astype(jnp.float32)
+    val = jnp.einsum("bij,bjk,bik->b", e, c_b.astype(jnp.float32), e)
+    w_norm = jnp.maximum(jnp.linalg.norm(w_b, axis=(-2, -1)), 1e-12)
+    return jnp.sqrt(jnp.maximum(val, 0.0)) / w_norm
+
+
+def _make_step(w, c, eta, w_norm, project, cfg: PGDConfig):
+    """One gradient step + projection, 2-D or batched.
+
+    The gradient step is the O(d_out·d_in²) hot spot: on the fused path it is
+    one Pallas program (subtract folded into the LHS load, scale+add epilogue
+    in the final K-step) that also reduces the stopping-rule residual norm
+    from its f32 accumulator; on the jnp path it is the explicit three-op
+    form.
+    """
+    batched = w.ndim == 3
+    axes = (-2, -1) if batched else None
+    scale = eta[:, None, None] if batched else eta
+
+    if cfg.fused_step():
+        interp = cfg.interpret or jax.default_backend() != "tpu"
+
+        def step(theta, t):
+            # the kernel reduces ‖R‖ from its f32 accumulator — recovering
+            # it as ‖Z−Θ‖/η would cancel catastrophically near convergence
+            z, resid_norm = _pgd_kernel.awp_pgd_step(
+                w, theta, c, eta, interpret=interp, with_resid_norm=True)
+            return project(z, t), 2.0 * resid_norm / w_norm
+        return step
+
+    def step(theta, t):
+        resid = (w - theta) @ c                   # ∝ −∇f/2;  O(d_out·d_in²)
+        z = theta + scale * resid
+        gnorm = 2.0 * jnp.linalg.norm(resid, axis=axes) / w_norm
+        return project(z, t), gnorm
+    return step
 
 
 def pgd(w: jax.Array, c: jax.Array, project: Callable[[jax.Array, jax.Array], jax.Array],
@@ -74,13 +126,7 @@ def pgd(w: jax.Array, c: jax.Array, project: Callable[[jax.Array, jax.Array], ja
     c = c.astype(jnp.float32)
     eta = _eta(c, cfg.eta_scale)
     w_norm = jnp.maximum(jnp.linalg.norm(w), 1e-12)
-
-    def step(theta, t):
-        resid = (w - theta) @ c                       # ∝ −∇f/2;  O(d_out·d_in²)
-        z = theta + eta * resid
-        theta_next = project(z, t)
-        gnorm = 2.0 * jnp.linalg.norm(resid) / w_norm
-        return theta_next, gnorm
+    step = _make_step(w, c, eta, w_norm, project, cfg)
 
     if cfg.trace_loss:
         def scan_body(theta, t):
@@ -105,18 +151,70 @@ def pgd(w: jax.Array, c: jax.Array, project: Callable[[jax.Array, jax.Array], ja
     return AWPResult(theta=theta, iters=iters, grad_norm=gnorm, loss_trace=None)
 
 
+def pgd_batched(w_b: jax.Array, c_b: jax.Array,
+                project: Callable[[jax.Array, jax.Array], jax.Array],
+                theta0_b: jax.Array, cfg: PGDConfig) -> AWPResult:
+    """Algorithm 1 over a stack of B independent problems as ONE program.
+
+    ``w_b``: (B, d_out, d_in); ``c_b``: (B, d_in, d_in); ``project`` must act
+    item-wise on the (B, d_out, d_in) iterate (vmap 2-D projections). One
+    while_loop runs over the max-iter envelope of the whole stack with
+    per-item convergence masking: a converged item's θ and gradient norm are
+    frozen while the rest keep iterating, so per-item results match the
+    sequential :func:`pgd` exactly (same steps applied, same stop rule).
+    Returns an AWPResult whose fields carry a leading batch dim
+    (``loss_trace``: (B, max_iters) in trace mode).
+    """
+    w = w_b.astype(jnp.float32)
+    c = c_b.astype(jnp.float32)
+    eta = _eta(c, cfg.eta_scale)                             # (B,)
+    w_norm = jnp.maximum(jnp.linalg.norm(w, axis=(-2, -1)), 1e-12)
+    step = _make_step(w, c, eta, w_norm, project, cfg)
+    b = w.shape[0]
+
+    if cfg.trace_loss:
+        def scan_body(theta, t):
+            theta_next, gnorm = step(theta, t)
+            return theta_next, (_loss_batched(w, theta_next, c), gnorm)
+        theta, (trace, gnorms) = jax.lax.scan(
+            scan_body, theta0_b.astype(jnp.float32), jnp.arange(cfg.max_iters))
+        return AWPResult(theta=theta,
+                         iters=jnp.full((b,), cfg.max_iters, jnp.int32),
+                         grad_norm=gnorms[-1], loss_trace=trace.T)
+
+    def cond(carry):
+        _, t, gnorm, _ = carry
+        return jnp.logical_and(t < cfg.max_iters, jnp.any(gnorm >= cfg.tol))
+
+    def body(carry):
+        theta, t, gnorm, iters = carry
+        active = gnorm >= cfg.tol                            # (B,)
+        theta_next, gnorm_next = step(theta, t)
+        theta = jnp.where(active[:, None, None], theta_next, theta)
+        gnorm = jnp.where(active, gnorm_next, gnorm)
+        return theta, t + 1, gnorm, iters + active.astype(jnp.int32)
+
+    theta, _, gnorm, iters = jax.lax.while_loop(
+        cond, body, (theta0_b.astype(jnp.float32), jnp.int32(0),
+                     jnp.full((b,), jnp.inf, jnp.float32),
+                     jnp.zeros((b,), jnp.int32)))
+    return AWPResult(theta=theta, iters=iters, grad_norm=gnorm, loss_trace=None)
+
+
 # ---------------------------------------------------------------------------
 # Paper recipes
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("k", "max_iters", "trace_loss", "nm"))
+@functools.partial(jax.jit, static_argnames=("k", "max_iters", "trace_loss",
+                                             "nm", "use_pallas"))
 def prune(w: jax.Array, c: jax.Array, k: int, *, theta0: Optional[jax.Array] = None,
           max_iters: int = 200, trace_loss: bool = False,
-          nm: Optional[tuple] = None) -> AWPResult:
+          nm: Optional[tuple] = None, use_pallas: bool = False) -> AWPResult:
     """§4.1 pruning recipe. ``k`` = kept entries per row = (1-p)·d_in.
 
     theta0 defaults to the Wanda solution (paper's init); pass explicitly to
     ablate. ``nm=(2,4)`` switches the constraint to N:M structured sparsity.
+    ``use_pallas`` routes the gradient step through the fused kernel on TPU.
     """
     if theta0 is None:
         from repro.core.baselines import wanda   # local import: avoid cycle
@@ -126,20 +224,22 @@ def prune(w: jax.Array, c: jax.Array, k: int, *, theta0: Optional[jax.Array] = N
     else:
         project = lambda z, t: proj.prune_n_m(z, *nm)
     cfg = PGDConfig(max_iters=max_iters, tol=1e-4, eta_scale=2.0,
-                    trace_loss=trace_loss)
+                    trace_loss=trace_loss, use_pallas=use_pallas)
     return pgd(w, c, project, theta0, cfg)
 
 
-@functools.partial(jax.jit, static_argnames=("bits", "group_size", "max_iters", "trace_loss"))
+@functools.partial(jax.jit, static_argnames=("bits", "group_size", "max_iters",
+                                             "trace_loss", "use_pallas"))
 def quantize(w: jax.Array, c: jax.Array, bits: int, *, group_size: int = 128,
              theta0: Optional[jax.Array] = None, max_iters: int = 10,
-             trace_loss: bool = False) -> AWPResult:
+             trace_loss: bool = False, use_pallas: bool = False) -> AWPResult:
     """§4.2 quantization recipe (INT{2,3,4,8}, group-wise, RTN init)."""
     if theta0 is None:
         theta0 = proj.quant_project(w.astype(jnp.float32), bits, group_size)
     project = lambda z, t: proj.quant_project(z, bits, group_size)
     cfg = PGDConfig(max_iters=max_iters, tol=0.0,   # paper runs all 10 iters
-                    eta_scale=1.5, trace_loss=trace_loss)
+                    eta_scale=1.5, trace_loss=trace_loss,
+                    use_pallas=use_pallas)
     res = pgd(w, c, project, theta0, cfg)
     # Guard (beyond-paper robustness): the min/max group grid moves with the
     # iterate, so the quant projection set drifts and the loss is not
@@ -150,10 +250,12 @@ def quantize(w: jax.Array, c: jax.Array, bits: int, *, group_size: int = 128,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "k", "bits", "group_size", "ramp_iters", "prune_only_iters", "total_iters", "trace_loss"))
+    "k", "bits", "group_size", "ramp_iters", "prune_only_iters", "total_iters",
+    "trace_loss", "use_pallas"))
 def joint(w: jax.Array, c: jax.Array, k: int, bits: int = 4, *,
           group_size: int = 128, ramp_iters: int = 25, prune_only_iters: int = 50,
-          total_iters: int = 100, trace_loss: bool = False) -> AWPResult:
+          total_iters: int = 100, trace_loss: bool = False,
+          use_pallas: bool = False) -> AWPResult:
     """§4.3 joint prune+quant recipe.
 
     Schedule: iters [0, ramp) ramp the pruning ratio linearly to target;
@@ -174,20 +276,29 @@ def joint(w: jax.Array, c: jax.Array, k: int, bits: int = 4, *,
         return jnp.where(t < prune_only_iters, pruned, quantized)
 
     theta0 = jnp.asarray(w, jnp.float32)               # ramp starts from W
+    # tol=0 already makes the while_loop run exactly total_iters, so the
+    # per-iter loss einsum is only paid when the trace is requested
     cfg = PGDConfig(max_iters=total_iters, tol=0.0, eta_scale=1.5,
-                    trace_loss=True)                   # fixed-length by design
+                    trace_loss=trace_loss, use_pallas=use_pallas)
     res = pgd(w, c, project, theta0, cfg)
     # Final projection: exact-k mask from the last iterate, quantize, re-mask.
     mask = proj.topk_row_mask(res.theta, k)
     theta = proj.quant_project(res.theta * mask, bits, group_size) * mask
-    res = res._replace(theta=theta)
-    return res if trace_loss else res._replace(loss_trace=None)
+    return res._replace(theta=theta)
 
 
 def activation_loss(w: jax.Array, theta: jax.Array, c: jax.Array) -> jax.Array:
     """Public normalized activation-aware loss (Fig. 1 metric)."""
     return _loss(jnp.asarray(w, jnp.float32), jnp.asarray(theta, jnp.float32),
                  jnp.asarray(c, jnp.float32))
+
+
+def activation_loss_batched(w_b: jax.Array, theta_b: jax.Array,
+                            c_b: jax.Array) -> jax.Array:
+    """Per-item Fig.-1 loss over a (B, d_out, d_in) stack — one reduction."""
+    return _loss_batched(jnp.asarray(w_b, jnp.float32),
+                         jnp.asarray(theta_b, jnp.float32),
+                         jnp.asarray(c_b, jnp.float32))
 
 
 # ---------------------------------------------------------------------------
@@ -257,36 +368,46 @@ from repro.core.specs import QuantSpec as _QuantSpec  # noqa: E402
 from repro.quant import QTensor as _QTensor  # noqa: E402
 
 
-def _prune_result(res: AWPResult) -> "_registry.CompressResult":
+# Adapters run the fused gradient step (use_pallas=True: Pallas on TPU,
+# the identical jnp formulation elsewhere) so both driver engines execute
+# the same math on every backend. They keep every metric as a DEVICE scalar (no int()/float() host syncs
+# in the per-layer path) and thread the covariance they built through
+# ``aux["covariance"]`` so the driver reuses it for the loss instead of
+# paying the O(d_in²·n) reduction a second time; the driver pops it before
+# the report is stored (a pinned (d_in, d_in) per layer would not scale).
+
+def _prune_result(res: AWPResult, c) -> "_registry.CompressResult":
     return _registry.CompressResult(
-        theta=res.theta, mask=res.theta != 0, iters=int(res.iters),
-        aux={"grad_norm": float(res.grad_norm)})
+        theta=res.theta, mask=res.theta != 0, iters=res.iters,
+        aux={"grad_norm": res.grad_norm, "covariance": c})
 
 
 @_registry.register("awp_prune", spec_cls=_PruneSpec)
 def _awp_prune(w, stats, spec):
     c = _calib.covariance(stats, damp=spec.damp)
-    return _prune_result(prune(w, c, spec.k_for(w.shape[1])))
+    return _prune_result(prune(w, c, spec.k_for(w.shape[1]),
+                               use_pallas=True), c)
 
 
 @_registry.register("awp_prune_nm", spec_cls=_PruneSpec)
 def _awp_prune_nm(w, stats, spec):
     c = _calib.covariance(stats, damp=spec.damp)
     return _prune_result(prune(w, c, spec.k_for(w.shape[1]),
-                               nm=spec.nm or (2, 4)))
+                               nm=spec.nm or (2, 4), use_pallas=True), c)
 
 
 @_registry.register("awp_quant", spec_cls=_QuantSpec)
 def _awp_quant(w, stats, spec):
     c = _calib.covariance(stats, damp=spec.damp)
     g = spec.group_for(w.shape[1])
-    res = quantize(w, c, spec.bits, group_size=g)
+    res = quantize(w, c, spec.bits, group_size=g, use_pallas=True)
     # res.theta is on the group grid already, so packing is a near-exact
     # regrid; the codes become the source of truth (theta = dequant(codes)).
     qt = _QTensor.from_dense(res.theta, spec.bits, g)
     return _registry.CompressResult(theta=qt.dequant(), qtensor=qt,
-                                    iters=int(res.iters),
-                                    aux={"grad_norm": float(res.grad_norm)})
+                                    iters=res.iters,
+                                    aux={"grad_norm": res.grad_norm,
+                                         "covariance": c})
 
 
 @_registry.register("awp_quant_scaled", spec_cls=_QuantSpec)
@@ -298,22 +419,24 @@ def _awp_quant_scaled(w, stats, spec):
     # theta·diag(s) is on the group grid — pack in scaled space (AWQ-style).
     qt = _QTensor.from_dense(theta, spec.bits, g, col_scale=s)
     return _registry.CompressResult(theta=qt.dequant(), qtensor=qt, iters=10,
-                                    aux={"col_scaled": True})
+                                    aux={"col_scaled": True, "covariance": c})
 
 
 @_registry.register("awp_joint", spec_cls=_JointSpec)
 def _awp_joint(w, stats, spec):
     c = _calib.covariance(stats, damp=spec.damp)
     g = spec.group_for(w.shape[1])
-    res = joint(w, c, spec.k_for(w.shape[1]), spec.bits, group_size=g)
+    res = joint(w, c, spec.k_for(w.shape[1]), spec.bits, group_size=g,
+                use_pallas=True)
     mask = res.theta != 0
     # Zeros land exactly on the zero-point code, so the packed artifact
     # preserves the sparsity pattern bit-exactly.
     qt = _QTensor.from_dense(res.theta, spec.bits, g)
     theta = qt.dequant() * mask
     return _registry.CompressResult(theta=theta, mask=mask, qtensor=qt,
-                                    iters=int(res.iters))
+                                    iters=res.iters, aux={"covariance": c})
 
 
-__all__ = ["AWPResult", "PGDConfig", "pgd", "prune", "quantize", "joint",
-           "quantize_scaled", "activation_loss"]
+__all__ = ["AWPResult", "PGDConfig", "pgd", "pgd_batched", "prune",
+           "quantize", "joint", "quantize_scaled", "activation_loss",
+           "activation_loss_batched"]

@@ -66,7 +66,7 @@ def _compress(w, stats, spec):
     # (col_scale=s) round-trips: qt.dequant() == wq up to regrid rounding.
     qt = QTensor.from_dense(wq, spec.bits, g, col_scale=s)
     return registry.CompressResult(theta=qt.dequant(), qtensor=qt,
-                                   aux={"col_scaled": True})
+                                   aux={"col_scaled": True, "covariance": c})
 
 
 __all__ = ["quantize_weight", "quantize_weight_with_scale"]

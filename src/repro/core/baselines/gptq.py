@@ -105,7 +105,8 @@ def _compress(w, stats, spec):
     qt = QTensor.from_codes(jnp.asarray(codes, jnp.int32),
                             jnp.asarray(g_scale, jnp.float32),
                             jnp.asarray(g_zero, jnp.float32), spec.bits, g)
-    return _registry.CompressResult(theta=qt.dequant(), qtensor=qt)
+    return _registry.CompressResult(theta=qt.dequant(), qtensor=qt,
+                                    aux={"covariance": c})
 
 
 __all__ = ["quantize_weight"]

@@ -35,7 +35,8 @@ def _adapter(pipeline):
                          spec.group_for(w.shape[1]))
         # AWQ's per-channel scale is folded into theta, so a plain-grid
         # repack would undo it — these baselines stay dense (mask only).
-        return registry.CompressResult(theta=theta, mask=theta != 0)
+        return registry.CompressResult(theta=theta, mask=theta != 0,
+                                       aux={"covariance": c})
     return _compress
 
 

@@ -93,4 +93,5 @@ def _compress(w, stats, spec):
     theta = jnp.asarray(prune_weight(
         np.asarray(w, np.float32), np.asarray(c, np.float64),
         spec.k_for(w.shape[1])))
-    return _registry.CompressResult(theta=theta, mask=theta != 0)
+    return _registry.CompressResult(theta=theta, mask=theta != 0,
+                                    aux={"covariance": c})

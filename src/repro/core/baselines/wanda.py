@@ -50,7 +50,8 @@ def _compress(w, stats, spec):
         theta = prune_weight_n_m(w, c, *spec.nm)
     else:
         theta = prune_weight(w, c, spec.k_for(w.shape[1]))
-    return registry.CompressResult(theta=theta, mask=theta != 0)
+    return registry.CompressResult(theta=theta, mask=theta != 0,
+                                   aux={"covariance": c})
 
 
 __all__ = ["scores", "prune_weight", "prune_weight_n_m"]

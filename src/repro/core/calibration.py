@@ -9,17 +9,23 @@ shard and :func:`cross_replica` psums the sufficient statistics once per layer
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
 
 
 class CalibStats(NamedTuple):
-    """Sufficient statistics for one linear layer's input activations."""
-    n: jax.Array          # scalar f32 — total token count folded in
-    c_sum: jax.Array      # (d_in, d_in) f32 — Σ xᵀx
-    abs_sum: jax.Array    # (d_in,) f32 — Σ |x| (AWQ act scales)
+    """Sufficient statistics for one linear layer's input activations.
+
+    Every field may carry leading batch dims (the batched compression engine
+    stacks B layers' stats into one ``CalibStats``); the derived quantities
+    below (:func:`covariance`, :func:`act_mean_abs`, :func:`col_l2`) operate
+    on the trailing axes and broadcast over the rest.
+    """
+    n: jax.Array          # () f32 — total token count folded in  (or (B,))
+    c_sum: jax.Array      # (d_in, d_in) f32 — Σ xᵀx              (or (B, d, d))
+    abs_sum: jax.Array    # (d_in,) f32 — Σ |x| (AWQ act scales)  (or (B, d))
 
 
 def init(d_in: int) -> CalibStats:
@@ -50,24 +56,38 @@ def covariance(stats: CalibStats, damp: float = 0.0) -> jax.Array:
 
     Damping is the standard guard (SparseGPT uses 1%) for layers whose
     calibration slice is rank-deficient — e.g. MoE experts that routed few
-    tokens (DESIGN.md §5)."""
+    tokens (DESIGN.md §5). Broadcasts over leading batch dims, so stacked
+    stats yield a ``(B, d_in, d_in)`` covariance in one reduction."""
     n = jnp.maximum(stats.n, 1.0)
-    c = stats.c_sum / n
+    c = stats.c_sum / n[..., None, None]
     if damp:
-        d_in = c.shape[0]
-        c = c + (damp * jnp.trace(c) / d_in) * jnp.eye(d_in, dtype=c.dtype)
+        d_in = c.shape[-1]
+        tr = jnp.trace(c, axis1=-2, axis2=-1)
+        c = c + (damp * tr[..., None, None] / d_in) * jnp.eye(d_in,
+                                                              dtype=c.dtype)
     return c
 
 
 def act_mean_abs(stats: CalibStats) -> jax.Array:
     """Per-channel mean |x| (AWQ's activation scale)."""
-    return stats.abs_sum / jnp.maximum(stats.n, 1.0)
+    return stats.abs_sum / jnp.maximum(stats.n, 1.0)[..., None]
 
 
 def col_l2(stats: CalibStats) -> jax.Array:
     """Per-channel ‖X[i, :]‖₂ (Wanda's activation scale) = sqrt(n·C_ii)."""
-    return jnp.sqrt(jnp.maximum(jnp.diagonal(stats.c_sum), 0.0))
+    return jnp.sqrt(jnp.maximum(
+        jnp.diagonal(stats.c_sum, axis1=-2, axis2=-1), 0.0))
+
+
+def stack_stats(stats_list: Sequence[CalibStats]) -> CalibStats:
+    """Stack B layers' stats into one batched CalibStats (leading dim B)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *stats_list)
+
+
+def slice_stats(stats: CalibStats, i) -> CalibStats:
+    """Select item ``i`` of a stacked CalibStats (device op, no host sync)."""
+    return jax.tree.map(lambda x: x[i], stats)
 
 
 __all__ = ["CalibStats", "init", "update", "cross_replica", "covariance",
-           "act_mean_abs", "col_l2"]
+           "act_mean_abs", "col_l2", "stack_stats", "slice_stats"]

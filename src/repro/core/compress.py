@@ -103,23 +103,47 @@ def compress_layer(w_paper: jax.Array, stats: calib.CalibStats,
 # capture folding
 # ---------------------------------------------------------------------------
 
+def _init_stacked(num: int, d_in: int) -> calib.CalibStats:
+    """Per-expert stats stacked on a leading expert axis (one leaf each)."""
+    return calib.CalibStats(n=jnp.zeros((num,), jnp.float32),
+                            c_sum=jnp.zeros((num, d_in, d_in), jnp.float32),
+                            abs_sum=jnp.zeros((num, d_in), jnp.float32))
+
+
 def _fold_captures(stats: Dict[str, Any], caps: Dict[str, jax.Array],
                    num_experts: int):
-    """Fold one batch's captures into the per-capture-key stats dict."""
+    """Fold one batch's captures into the per-capture-key stats dict.
+
+    MoE experts are folded as ONE einsum over the expert axis into stacked
+    ``(E, d, d)`` sufficient statistics (keys ``("moe",)``/``("moe_down",)``)
+    instead of E separate dispatches per batch. The routing gate is 0/1, so
+    the masked update Σ (m·x)ᵀ(m·x) equals Σ m·x xᵀ — same statistics as the
+    old per-expert loop, including its convention that ``n`` counts ALL
+    tokens (masked rows contribute zeros but are counted)."""
     for key, val in caps.items():
         if key in ("moe_mask", "moe_up"):
             continue
         if key == "moe_in":
-            x = val                                     # (T, d)
-            mask = caps["moe_mask"].astype(jnp.float32)  # (T, E)
-            up = caps["moe_up"]                         # (T, E, f)
-            for e in range(num_experts):
-                me = mask[:, e:e + 1]
-                st = stats.setdefault(("moe", e), calib.init(x.shape[-1]))
-                stats[("moe", e)] = calib.update(st, x * me)
-                std = stats.setdefault(("moe_down", e),
-                                       calib.init(up.shape[-1]))
-                stats[("moe_down", e)] = calib.update(std, up[:, e, :] * me)
+            x = val.reshape(-1, val.shape[-1]).astype(jnp.float32)   # (T, d)
+            mask = caps["moe_mask"].astype(jnp.float32)              # (T, E)
+            up = caps["moe_up"].astype(jnp.float32)                  # (T, E, f)
+            t = x.shape[0]
+            st = stats.get(("moe",))
+            if st is None:
+                st = _init_stacked(num_experts, x.shape[-1])
+            stats[("moe",)] = calib.CalibStats(
+                n=st.n + t,
+                c_sum=st.c_sum + jnp.einsum("te,td,tf->edf", mask, x, x),
+                abs_sum=st.abs_sum + jnp.einsum("te,td->ed", mask,
+                                                jnp.abs(x)))
+            std = stats.get(("moe_down",))
+            if std is None:
+                std = _init_stacked(num_experts, up.shape[-1])
+            stats[("moe_down",)] = calib.CalibStats(
+                n=std.n + t,
+                c_sum=std.c_sum + jnp.einsum("te,tef,teg->efg", mask, up, up),
+                abs_sum=std.abs_sum + jnp.einsum("te,tef->ef", mask,
+                                                 jnp.abs(up)))
             continue
         d_in = val.shape[-1]
         st = stats.setdefault(key, calib.init(d_in))
@@ -129,7 +153,7 @@ def _fold_captures(stats: Dict[str, Any], caps: Dict[str, jax.Array],
 def _stats_for(stats, cap_key: str, name: str):
     if cap_key in ("moe", "moe_down"):
         e = int(name.rsplit("_", 1)[1])
-        return stats[(cap_key, e)]
+        return calib.slice_stats(stats[(cap_key,)], e)
     return stats[cap_key]
 
 
@@ -185,6 +209,34 @@ def _tree_set(params, path, layer: Optional[int], value):
 def set_linear(params, path, layer: Optional[int], w_paper):
     """Functional write of one PAPER-orientation (d_out, d_in) weight."""
     return _tree_set(params, path, layer, w_paper.T)
+
+
+def _tree_set_many(params, dict_path, idx_list, values):
+    """Functional write of MANY same-leaf updates in one scatter.
+
+    ``idx_list`` holds the stacked-leaf index tuples (same arity) of each
+    value; values are stored orientation (d_in, d_out). Replaces the O(E)
+    per-expert ``leaf.at[idx].set`` round trips — each of which copies the
+    whole stacked leaf — with a single advanced-index scatter."""
+    def rec(node, rest):
+        out = dict(node)
+        key = rest[0]
+        if len(rest) == 1:
+            leaf = node[key]
+            vals = [v.astype(leaf.dtype) for v in values]
+            if idx_list[0] == ():
+                assert len(vals) == 1
+                out[key] = vals[0]
+            elif len(vals) == 1:
+                out[key] = leaf.at[idx_list[0]].set(vals[0])
+            else:
+                gather = tuple(jnp.asarray(col)
+                               for col in zip(*idx_list))
+                out[key] = leaf.at[gather].set(jnp.stack(vals))
+        else:
+            out[key] = rec(node[key], rest[1:])
+        return out
+    return rec(params, list(dict_path))
 
 
 # ---------------------------------------------------------------------------
@@ -262,12 +314,143 @@ class CompressionReport:
         return "\n".join(lines)
 
 
+def _block_works(model, params, block_idx: int, stats, policy: Policy):
+    """Resolve this block's linears against the policy into LayerWork items.
+
+    One host sync per BLOCK (not per layer) fetches the routed-token counts
+    for the never-routed-expert guard."""
+    from repro.core import batched as _batched
+    works = []
+    for (name, path, cap_key) in model.block_linears(block_idx):
+        layer = block_idx if path[0] == "blocks" else None
+        qname = qualified_name(path, layer)
+        spec = policy.spec_for(qname, name)
+        if spec is None:
+            continue                         # rule says: leave dense
+        st = _stats_for(stats, cap_key, name)
+        works.append(_batched.LayerWork(name, qname, tuple(path), layer,
+                                        spec, st,
+                                        get_linear(params, path, layer)))
+    if not works:
+        return works
+    ns = jax.device_get(jnp.stack([jnp.asarray(wk.stats.n) for wk in works]))
+    return [wk for wk, n in zip(works, ns) if n >= 1]   # never routed: dense
+
+
+def _compress_block_batched(model, params, block_idx: int, stats,
+                            policy: Policy, report: CompressionReport,
+                            verbose: bool):
+    """Shape-bucketed block compression: one device program per bucket, all
+    host syncs (metrics, masks, routing guard) amortized to block scope."""
+    from repro.core import batched as _batched
+    t0 = time.time()
+    works = _block_works(model, params, block_idx, stats, policy)
+    if not works:
+        return params
+    outcomes = _batched.compress_block(works)
+
+    # grouped write-back: every update targeting the same stacked leaf (all
+    # E experts of a block, q/k/v of one attn dict) lands in one scatter
+    groups: Dict[tuple, List[int]] = {}
+    for j, wk in enumerate(works):
+        dict_path, idx = _resolve(wk.path, wk.layer)
+        groups.setdefault(tuple(dict_path), []).append((idx, j))
+    for dict_path, entries in groups.items():
+        idx_list = [e[0] for e in entries]
+        vals = [outcomes[e[1]][0].theta.T for e in entries]
+        params = _tree_set_many(params, dict_path, idx_list, vals)
+
+    # deferred materialization: one transfer for the whole block's metrics
+    # and masks (the sequential driver paid one sync per layer here)
+    losses = jnp.stack([loss for _, loss in outcomes])
+    sps = jnp.stack([jnp.mean(res.theta == 0) for res, _ in outcomes])
+    host = jax.device_get({"loss": losses, "sparsity": sps,
+                           "masks": [res.mask for res, _ in outcomes],
+                           "iters": [res.iters for res, _ in outcomes]})
+    seconds = (time.time() - t0) / len(works)   # block time, amortized
+
+    for j, wk in enumerate(works):
+        res, _ = outcomes[j]
+        loss = float(host["loss"][j])
+        sp = float(host["sparsity"][j])
+        if res.loss is None:
+            res.loss = loss
+        res.theta = None        # written back: the report must not pin a
+        res.mask = host["masks"][j]      # second copy of the model on device
+        if host["iters"][j] is not None:
+            res.iters = int(host["iters"][j])
+        report.layers.append(LayerReport(block_idx, wk.name, 0.0, loss, sp,
+                                         seconds, method=wk.spec.method,
+                                         qualname=wk.qname))
+        report.artifacts[wk.qname] = LayerArtifact(wk.qname, wk.path,
+                                                   wk.layer, wk.spec, res)
+        if verbose:
+            print(f"  block {block_idx} {wk.name} [{wk.spec.method}]: "
+                  f"loss={loss:.4f} sparsity={sp:.2f}")
+    return params
+
+
+def _compress_block_sequential(model, params, block_idx: int, stats,
+                               policy: Policy, report: CompressionReport,
+                               verbose: bool):
+    """Layer-at-a-time reference driver (one program + host sync per layer).
+
+    Kept as the numerical baseline the batched engine is benchmarked and
+    parity-tested against (benchmarks/compress_bench.py)."""
+    for (name, path, cap_key) in model.block_linears(block_idx):
+        layer = block_idx if path[0] == "blocks" else None
+        qname = qualified_name(path, layer)
+        spec = policy.spec_for(qname, name)
+        if spec is None:
+            continue                     # rule says: leave dense
+        st = _stats_for(stats, cap_key, name)
+        if float(st.n) < 1:
+            continue                     # expert never routed: keep dense
+        w = get_linear(params, path, layer)
+        t0 = time.time()
+        res = compress_layer(w, st, spec)
+        # covariance once per layer: reuse the one the adapter built
+        c = res.aux.pop("covariance", None)
+        if c is None:
+            c = calib.covariance(st, damp=spec.damp)
+        loss = float(awp.activation_loss(w, res.theta, c))
+        if res.loss is None:
+            res.loss = loss
+        sp = float((np.asarray(res.theta) == 0).mean())
+        report.layers.append(LayerReport(block_idx, name, 0.0, loss, sp,
+                                         time.time() - t0,
+                                         method=spec.method,
+                                         qualname=qname))
+        report.artifacts[qname] = LayerArtifact(qname, tuple(path), layer,
+                                                spec, res)
+        if verbose:
+            print(f"  block {block_idx} {name} [{spec.method}]: "
+                  f"loss={loss:.4f} sparsity={sp:.2f}")
+        params = _tree_set(params, path, layer, res.theta.T)
+        # written back: drop theta, host the mask — the report must not
+        # pin a second copy of the model (or per-layer masks) on device
+        res.theta = None
+        if res.iters is not None:
+            res.iters = int(res.iters)
+        if res.mask is not None:
+            res.mask = np.asarray(res.mask)
+    return params
+
+
 def compress_model(model, params, calib_batches: List[dict],
-                   policy: PolicyLike, verbose: bool = False):
+                   policy: PolicyLike, verbose: bool = False,
+                   engine: str = "batched"):
     """Compress every linear of every block per the policy.
 
-    Returns ``(params, CompressionReport)``.
+    ``engine="batched"`` (default) buckets each block's linears by
+    (shape, spec) and compresses every bucket as one device program with
+    host syncs deferred to block boundaries; ``engine="sequential"`` is the
+    layer-at-a-time reference driver. Both return the same
+    ``(params, CompressionReport)`` with per-layer losses matching to ~1e-5.
     """
+    if engine not in ("batched", "sequential"):
+        raise ValueError(f"engine must be 'batched' or 'sequential', "
+                         f"got {engine!r}")
     policy = as_policy(policy)
     # fail fast: unknown methods / method-spec mismatches surface here, not
     # minutes into the block loop
@@ -277,6 +460,8 @@ def compress_model(model, params, calib_batches: List[dict],
     num_experts = getattr(model.cfg, "num_experts", 0)
     hs = [model.embed(params, b) for b in calib_batches]
     report = CompressionReport(policy=policy)
+    block_fn = (_compress_block_batched if engine == "batched"
+                else _compress_block_sequential)
 
     for i in range(model.num_blocks()):
         # 1) capture calibration statistics for this block
@@ -285,38 +470,7 @@ def compress_model(model, params, calib_batches: List[dict],
             _, caps = model.block_apply_one(params, i, h, capture=True)
             _fold_captures(stats, caps, num_experts)
         # 2) compress each linear per its policy rule
-        for (name, path, cap_key) in model.block_linears(i):
-            layer = i if path[0] == "blocks" else None
-            qname = qualified_name(path, layer)
-            spec = policy.spec_for(qname, name)
-            if spec is None:
-                continue                     # rule says: leave dense
-            st = _stats_for(stats, cap_key, name)
-            if float(st.n) < 1:
-                continue                     # expert never routed: keep dense
-            w = get_linear(params, path, layer)
-            t0 = time.time()
-            res = compress_layer(w, st, spec)
-            c = calib.covariance(st, damp=spec.damp)
-            loss = float(awp.activation_loss(w, res.theta, c))
-            if res.loss is None:
-                res.loss = loss
-            sp = float((np.asarray(res.theta) == 0).mean())
-            report.layers.append(LayerReport(i, name, 0.0, loss, sp,
-                                             time.time() - t0,
-                                             method=spec.method,
-                                             qualname=qname))
-            report.artifacts[qname] = LayerArtifact(qname, tuple(path), layer,
-                                                    spec, res)
-            if verbose:
-                print(f"  block {i} {name} [{spec.method}]: "
-                      f"loss={loss:.4f} sparsity={sp:.2f}")
-            params = _tree_set(params, path, layer, res.theta.T)
-            # written back: drop theta, host the mask — the report must not
-            # pin a second copy of the model (or per-layer masks) on device
-            res.theta = None
-            if res.mask is not None:
-                res.mask = np.asarray(res.mask)
+        params = block_fn(model, params, i, stats, policy, report, verbose)
         # 3) propagate compressed activations to the next block
         hs = [model.block_apply_one(params, i, h)[0] for h in hs]
     return params, report

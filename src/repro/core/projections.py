@@ -26,12 +26,8 @@ def topk_row(z: jax.Array, k: int) -> jax.Array:
     """Keep the k largest-|.| entries of each row of z; zero the rest.
 
     Exact-k semantics (ties broken by index, like ``jax.lax.top_k``).
-    z: (d_out, d_in) -> same shape.
-
-    Implemented with the rank (double-argsort) formulation rather than a
-    top_k + scatter: every op is row-local, so under SPMD row sharding the
-    projection partitions with ZERO collectives (the scatter version forced
-    XLA into cross-shard gathers — §Perf compress hillclimb, iteration 1).
+    z: (..., d_in) -> same shape (leading dims are independent rows, so the
+    batched engine projects a whole (B, d_out, d_in) stack in one call).
     """
     if k >= z.shape[-1]:
         return z
@@ -41,15 +37,26 @@ def topk_row(z: jax.Array, k: int) -> jax.Array:
 
 
 def topk_row_mask(z: jax.Array, k: int) -> jax.Array:
-    """Boolean keep-mask of :func:`topk_row` (rank-based, scatter-free)."""
+    """Boolean keep-mask of :func:`topk_row` (threshold-based, scatter-free).
+
+    kth-magnitude threshold from ``lax.top_k`` + leftmost tie-keeping, which
+    reproduces the stable-argsort ranking (ties by index) bit-exactly while
+    doing one O(d log k) selection instead of two full argsorts — ~3× faster
+    on the CPU backend, where this is the PGD inner loop's hottest op. Every
+    op is row-local, so under SPMD row sharding the projection still
+    partitions with ZERO collectives (§Perf compress hillclimb).
+    """
     if k >= z.shape[-1]:
         return jnp.ones(z.shape, dtype=bool)
     if k <= 0:
         return jnp.zeros(z.shape, dtype=bool)
     mag = jnp.abs(z)
-    order = jnp.argsort(-mag, axis=-1)      # stable: ties by index, as top_k
-    rank = jnp.argsort(order, axis=-1)
-    return rank < k
+    thr = jax.lax.top_k(mag, k)[0][..., -1:]       # kth largest per row
+    gt = mag > thr
+    need = k - gt.sum(axis=-1, keepdims=True)      # ties still to keep
+    eq = mag == thr
+    keep_eq = eq & (jnp.cumsum(eq, axis=-1) <= need)
+    return gt | keep_eq
 
 
 def topk_matrix(z: jax.Array, k_total: int) -> jax.Array:
@@ -81,17 +88,23 @@ def ramp_ratio(t: jax.Array, target: float, ramp_iters: int) -> jax.Array:
 def topk_row_dynamic(z: jax.Array, keep_ratio: jax.Array) -> jax.Array:
     """Row top-k where the *ratio* is a traced scalar (for the ramp schedule).
 
-    Implemented with a per-row rank threshold instead of a static k: entry is
-    kept iff its magnitude-rank within the row < keep_ratio * d_in.
-    Exact-k (rank is a strict ordering via argsort double-trick).
+    Exact-k with leftmost tie-keeping (matches the static
+    :func:`topk_row_mask` ranking). ``k`` is traced, so the threshold is
+    gathered from ONE descending sort per row instead of the old
+    double-argsort rank construction — row-local, scatter-free.
     """
     d_in = z.shape[-1]
     mag = jnp.abs(z)
-    # rank[i, j] = position of z[i, j] in descending |z[i, :]| order
-    order = jnp.argsort(-mag, axis=-1)
-    rank = jnp.argsort(order, axis=-1)
     k = jnp.round(keep_ratio * d_in).astype(jnp.int32)
-    return jnp.where(rank < k, z, 0)
+    srt = jnp.sort(mag, axis=-1)[..., ::-1]        # descending magnitudes
+    idx = jnp.clip(k - 1, 0, d_in - 1)
+    thr = jnp.take_along_axis(
+        srt, jnp.broadcast_to(idx, srt.shape[:-1])[..., None], axis=-1)
+    gt = mag > thr
+    need = k - gt.sum(axis=-1, keepdims=True)
+    eq = mag == thr
+    keep = gt | (eq & (jnp.cumsum(eq, axis=-1) <= need))
+    return jnp.where(jnp.logical_and(keep, k > 0), z, 0)
 
 
 # ---------------------------------------------------------------------------

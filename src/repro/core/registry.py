@@ -67,6 +67,7 @@ class _Entry:
 
 
 _REGISTRY: Dict[str, _Entry] = {}
+_BATCHED: Dict[str, Callable] = {}
 _BUILTINS_LOADED = False
 
 
@@ -78,6 +79,26 @@ def register(name: str, *, spec_cls: type = JointSpec) -> Callable[[Method], Met
     return deco
 
 
+def register_batched(name: str) -> Callable[[Callable], Callable]:
+    """Decorator: register a *batched* implementation for method ``name``.
+
+    A batched method compresses a whole shape bucket — B same-shape linears
+    sharing one spec — in one device program:
+
+        batched(w_b, c_b, stats_b, spec) -> List[CompressResult]   # len B
+
+    ``w_b`` is ``(B, d_out, d_in)``, ``c_b`` the ``(B, d_in, d_in)`` damped
+    covariances (computed ONCE by the engine and reused for the loss), and
+    ``stats_b`` the stacked :class:`CalibStats`. Methods without a batched
+    implementation still work everywhere — the engine falls back to the
+    per-layer callable inside the bucket loop.
+    """
+    def deco(fn: Callable) -> Callable:
+        _BATCHED[name] = fn
+        return fn
+    return deco
+
+
 def _load_builtins() -> None:
     """Import the modules that register the built-in methods (idempotent)."""
     global _BUILTINS_LOADED
@@ -85,7 +106,8 @@ def _load_builtins() -> None:
         return
     import repro.core.awp        # noqa: F401  (registers awp_*)
     import repro.core.baselines  # noqa: F401  (registers the baselines)
-    _BUILTINS_LOADED = True      # only after both imports succeeded
+    import repro.core.batched    # noqa: F401  (registers batched variants)
+    _BUILTINS_LOADED = True      # only after all imports succeeded
 
 
 def _lookup(name: str) -> _Entry:
@@ -100,6 +122,12 @@ def _lookup(name: str) -> _Entry:
 
 def get_method(name: str) -> Method:
     return _lookup(name).fn
+
+
+def get_batched(name: str) -> Optional[Callable]:
+    """Batched implementation of ``name``, or None (engine falls back)."""
+    _lookup(name)                      # load builtins / unknown-name error
+    return _BATCHED.get(name)
 
 
 def spec_cls_for(name: str) -> type:
@@ -125,5 +153,6 @@ def available() -> Tuple[str, ...]:
     return tuple(sorted(_REGISTRY))
 
 
-__all__ = ["CompressResult", "Method", "register", "get_method",
-           "spec_cls_for", "validate_spec", "available"]
+__all__ = ["CompressResult", "Method", "register", "register_batched",
+           "get_method", "get_batched", "spec_cls_for", "validate_spec",
+           "available"]

@@ -24,6 +24,8 @@ def _interpret() -> bool:
 
 @functools.partial(jax.jit, static_argnames=("use_pallas",))
 def awp_pgd_step(w, theta, c, eta, use_pallas: bool = True):
+    """Fused Z = Θ + η(W−Θ)C. Accepts (M, K) or batched (B, M, K) operands
+    (per-item η allowed in the batched form — one program per shape bucket)."""
     if not use_pallas:
         return ref.awp_pgd_step(w, theta, c, eta)
     return _awp_pgd.awp_pgd_step(w, theta, c, eta, interpret=_interpret())

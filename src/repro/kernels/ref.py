@@ -8,10 +8,14 @@ from repro.core import projections as proj
 
 
 def awp_pgd_step(w, theta, c, eta):
-    """Z = Θ + η (W − Θ) C."""
+    """Z = Θ + η (W − Θ) C. Accepts (M, K) or batched (B, M, K) operands;
+    η may be per-item (B,) in the batched form."""
+    eta = jnp.asarray(eta, jnp.float32)
+    if eta.ndim:
+        eta = eta[..., None, None]
     return (theta.astype(jnp.float32)
-            + eta * (w.astype(jnp.float32) - theta.astype(jnp.float32))
-            @ c.astype(jnp.float32)).astype(w.dtype)
+            + eta * ((w.astype(jnp.float32) - theta.astype(jnp.float32))
+                     @ c.astype(jnp.float32))).astype(w.dtype)
 
 
 def topk_row(z, k):

@@ -10,7 +10,8 @@ Per-layer policies come from ``--policy`` (inline JSON or @file), e.g.
                        ["*.mlp.*",  {"kind": "QuantSpec", "bits": 4}]]}'
 
 Loads a trained checkpoint (or compresses random init if absent), runs the
-sequential layer-wise compression through the method registry, reports
+layer-wise compression through the method registry (shape-bucketed batched
+engine by default; ``--engine sequential`` for the reference driver), reports
 per-layer reconstruction losses + perplexity before/after, and saves the
 compressed checkpoint — packed QTensor codes included with ``--save-packed``.
 """
@@ -64,6 +65,10 @@ def main():
     ap.add_argument("--out", default="results/compressed_ckpt")
     ap.add_argument("--save-packed", action="store_true",
                     help="store quantized layers as packed QTensor codes")
+    ap.add_argument("--engine", default="batched",
+                    choices=("batched", "sequential"),
+                    help="shape-bucketed batched engine (default) or the "
+                         "layer-at-a-time reference driver")
     args = ap.parse_args()
 
     cfg = get_tiny_config(args.arch) if args.tiny else get_config(args.arch)
@@ -94,7 +99,8 @@ def main():
 
     before = ppl(params)
     policy = build_policy(args)
-    cp, report = compress_model(model, params, calib, policy, verbose=True)
+    cp, report = compress_model(model, params, calib, policy, verbose=True,
+                                engine=args.engine)
     after = ppl(cp)
     print("[compress] " + report.summary().replace("\n", "\n[compress] "))
     print(f"[compress] perplexity {before:.3f} -> {after:.3f}")

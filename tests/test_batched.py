@@ -1,0 +1,196 @@
+"""Batched compression engine: bucketing rules, batched-vs-sequential
+parity on dense + MoE models, fallback for methods without a batched
+implementation, and the batched PGD core against the per-layer reference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_tiny_config
+from repro.core import awp, batched, calibration as calib, registry
+from repro.core.compress import CompressionConfig, compress_model
+from repro.core.specs import Policy, PruneSpec, QuantSpec
+from repro.models import build_model, make_batch
+
+
+def _setup(arch, n_batches=2):
+    cfg = get_tiny_config(arch)
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    batches = [make_batch(cfg, jax.random.PRNGKey(i), 2, 24)
+               for i in range(n_batches)]
+    return cfg, model, params, batches
+
+
+def _both_engines(model, params, batches, policy):
+    cp_s, rep_s = compress_model(model, params, batches, policy,
+                                 engine="sequential")
+    cp_b, rep_b = compress_model(model, params, batches, policy,
+                                 engine="batched")
+    return (cp_s, rep_s), (cp_b, rep_b)
+
+
+def _assert_parity(seq, bat, atol=1e-5):
+    (cp_s, rep_s), (cp_b, rep_b) = seq, bat
+    ls = {r.qualname: r.loss_after for r in rep_s}
+    lb = {r.qualname: r.loss_after for r in rep_b}
+    assert set(ls) == set(lb)
+    for k in ls:
+        assert abs(ls[k] - lb[k]) <= atol, (k, ls[k], lb[k])
+    for a, b in zip(jax.tree.leaves(cp_s), jax.tree.leaves(cp_b)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# bucketing rules
+# ---------------------------------------------------------------------------
+
+def _work(name, w, spec, d_in=None):
+    d_in = d_in or w.shape[1]
+    return batched.LayerWork(name, name, ("blocks", name), 0, spec,
+                             calib.init(d_in), w)
+
+
+def test_bucket_key_groups_same_shape_same_spec(rng):
+    spec = PruneSpec(ratio=0.5)
+    w1 = jnp.asarray(rng.normal(size=(16, 32)), jnp.float32)
+    w2 = jnp.asarray(rng.normal(size=(16, 32)), jnp.float32)
+    w3 = jnp.asarray(rng.normal(size=(8, 32)), jnp.float32)
+    works = [_work("a", w1, spec), _work("b", w3, spec), _work("c", w2, spec),
+             _work("d", w1, PruneSpec(ratio=0.25)),
+             _work("e", w2, spec)]
+    buckets = batched.bucket_works(works)
+    assert list(buckets.values()) == [[0, 2, 4], [1], [3]]
+
+
+def test_moe_experts_land_in_one_bucket():
+    """All E experts of wu/wg (and separately wd) share a bucket; q/k/v
+    bucket by their (possibly GQA-distinct) shapes."""
+    cfg, model, params, batches = _setup("qwen3-moe-235b-a22b", 1)
+    from repro.core.compress import _block_works, _fold_captures, as_policy
+    pol = as_policy(CompressionConfig(method="wanda", ratio=0.5))
+    stats = {}
+    hs = [model.embed(params, b) for b in batches]
+    _, caps = model.block_apply_one(params, 0, hs[0], capture=True)
+    _fold_captures(stats, caps, cfg.num_experts)
+    works = _block_works(model, params, 0, stats, pol)
+    sizes = sorted(len(v) for v in batched.bucket_works(works).values())
+    e = cfg.num_experts
+    # {wk,wv} (GQA kv dim), {wq,wo} (d×d), {wd}, {wg,wu}
+    assert sizes == [2, 2, e, 2 * e]
+
+
+# ---------------------------------------------------------------------------
+# engine parity (the acceptance bar: ≤1e-5 on params and per-layer losses)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method,kw", [
+    ("awp_prune", dict(ratio=0.5)),
+    ("awp_quant", dict(bits=4, group_size=32)),
+    ("wanda", dict(ratio=0.5)),
+])
+def test_parity_on_moe(method, kw):
+    cfg, model, params, batches = _setup("qwen3-moe-235b-a22b")
+    ccfg = CompressionConfig(method=method, **kw)
+    seq, bat = _both_engines(model, params, batches, ccfg)
+    assert len(seq[1]) == len(bat[1]) > 0
+    _assert_parity(seq, bat)
+
+
+@pytest.mark.parametrize("method,kw", [
+    ("awp_prune", dict(ratio=0.5)),
+    ("awp_joint", dict(ratio=0.5, bits=4, group_size=32)),
+    ("magnitude", dict(ratio=0.5)),
+])
+def test_parity_on_dense(method, kw):
+    cfg, model, params, batches = _setup("granite-8b", 1)
+    ccfg = CompressionConfig(method=method, **kw)
+    seq, bat = _both_engines(model, params, batches, ccfg)
+    _assert_parity(seq, bat)
+
+
+def test_parity_mixed_policy_on_moe():
+    """Mixed per-layer policy: buckets must split on spec, not just shape."""
+    cfg, model, params, batches = _setup("qwen3-moe-235b-a22b", 1)
+    pol = Policy({"*.attn.*": QuantSpec(bits=8, group_size=32)},
+                 default=PruneSpec(ratio=0.5))
+    seq, bat = _both_engines(model, params, batches, pol)
+    _assert_parity(seq, bat)
+    methods = {r.qualname: r.method for r in bat[1]}
+    assert methods["blocks.0.attn.wq"] == "awp_quant"
+    assert methods["blocks.0.moe.wu.0"] == "awp_prune"
+
+
+def test_batched_fallback_for_unbatched_method():
+    """A method with no batched implementation runs per-item inside the
+    bucket loop with identical results."""
+    @registry.register("test_negate", spec_cls=QuantSpec)
+    def _negate(w, stats, spec):
+        return registry.CompressResult(theta=-w)
+
+    assert registry.get_batched("test_negate") is None
+    cfg, model, params, batches = _setup("granite-8b", 1)
+    cp, report = compress_model(model, params, batches,
+                                QuantSpec(method="test_negate"),
+                                engine="batched")
+    assert len(report) > 0
+    np.testing.assert_allclose(
+        np.asarray(cp["blocks"]["attn"]["wq"][0]),
+        -np.asarray(params["blocks"]["attn"]["wq"][0]), rtol=1e-6)
+
+
+def test_batched_packed_artifacts_bit_exact():
+    """Batched quant packing must keep dequant(codes) == written weight."""
+    cfg, model, params, batches = _setup("qwen3-moe-235b-a22b", 1)
+    cp, report = compress_model(model, params, batches,
+                                QuantSpec(bits=4, group_size=32),
+                                engine="batched")
+    from repro.core.compress import get_linear
+    for name, art in report.artifacts.items():
+        qt = art.result.qtensor
+        assert qt is not None
+        w = get_linear(cp, art.path, art.layer)
+        np.testing.assert_array_equal(np.asarray(qt.dequant()),
+                                      np.asarray(w))
+
+
+# ---------------------------------------------------------------------------
+# batched PGD core vs per-layer reference
+# ---------------------------------------------------------------------------
+
+def test_pgd_batched_matches_sequential_per_item(rng):
+    """Per-item convergence masking: every item of the stack must stop at
+    its own iteration count with the exact sequential trajectory."""
+    b, d_out, d_in, k = 5, 12, 16, 8
+    w_b = jnp.asarray(rng.normal(size=(b, d_out, d_in)), jnp.float32)
+    x = rng.normal(size=(b, 128, d_in)).astype(np.float32)
+    # mixed conditioning → convergence counts differ across items: a
+    # near-zero covariance and a low-rank one converge in O(1) iterations,
+    # the rest run to the cap
+    x[1] *= 1e-4
+    x[3][:, 6:] = 0.0
+    c_b = jnp.asarray(np.einsum("bti,btj->bij", x, x) / 128)
+
+    res_b = batched.prune_batched(w_b, c_b, k, use_pallas=False)
+    iters = np.asarray(res_b.iters)
+    for i in range(b):
+        res_i = awp.prune(w_b[i], c_b[i], k)
+        assert int(res_i.iters) == iters[i]
+        np.testing.assert_allclose(np.asarray(res_b.theta[i]),
+                                   np.asarray(res_i.theta),
+                                   rtol=1e-5, atol=1e-5)
+    assert len(set(iters.tolist())) > 1, "want distinct convergence counts"
+
+
+def test_quantize_batched_matches_sequential(rng):
+    b, d_out, d_in = 4, 8, 32
+    w_b = jnp.asarray(rng.normal(size=(b, d_out, d_in)), jnp.float32)
+    x = rng.normal(size=(b, 64, d_in)).astype(np.float32)
+    c_b = jnp.asarray(np.einsum("bti,btj->bij", x, x) / 64)
+    res_b = batched.quantize_batched(w_b, c_b, 4, group_size=16,
+                                     use_pallas=False)
+    for i in range(b):
+        res_i = awp.quantize(w_b[i], c_b[i], 4, group_size=16)
+        np.testing.assert_allclose(np.asarray(res_b.theta[i]),
+                                   np.asarray(res_i.theta),
+                                   rtol=1e-5, atol=1e-5)

@@ -80,6 +80,64 @@ def test_fused_prune_loop_matches_library(rng):
                                rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.parametrize("b,m,k", [(3, 16, 32), (5, 40, 100)])
+def test_awp_pgd_step_batched(rng, b, m, k):
+    """Batched grid vs the per-item 2-D kernel and the jnp oracle,
+    including per-item η."""
+    w = jnp.asarray(rng.normal(size=(b, m, k)), jnp.float32)
+    th = jnp.asarray(rng.normal(size=(b, m, k)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(b, k, k)), jnp.float32)
+    eta = jnp.asarray(rng.uniform(0.05, 0.3, size=(b,)), jnp.float32)
+    out = np.asarray(ops.awp_pgd_step(w, th, c, eta))
+    oracle = np.asarray(ref.awp_pgd_step(w, th, c, eta))
+    np.testing.assert_allclose(out, oracle, rtol=2e-5, atol=2e-5)
+    for i in range(b):
+        per_item = ops.awp_pgd_step(w[i], th[i], c[i], eta[i])
+        np.testing.assert_allclose(out[i], np.asarray(per_item),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_pgd_fused_step_matches_jnp_step(rng):
+    """pgd with PGDConfig(use_pallas=True, interpret=True) must reproduce
+    the jnp-step loop: same iterate, iteration count, and gradient norm."""
+    from repro.core import awp, projections as proj
+    w = jnp.asarray(rng.normal(size=(16, 32)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(128, 32)), jnp.float32)
+    c = x.T @ x / 128
+    k = 16
+    theta0 = ref.topk_row(w, k)
+    project = lambda z, t: proj.topk_row(z, k)
+    res_jnp = awp.pgd(w, c, project, theta0,
+                      awp.PGDConfig(max_iters=8, tol=0.0))
+    res_pal = awp.pgd(w, c, project, theta0,
+                      awp.PGDConfig(max_iters=8, tol=0.0, use_pallas=True,
+                                    interpret=True))
+    assert int(res_pal.iters) == int(res_jnp.iters)
+    np.testing.assert_allclose(np.asarray(res_pal.theta),
+                               np.asarray(res_jnp.theta),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(float(res_pal.grad_norm),
+                               float(res_jnp.grad_norm),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_pgd_batched_fused_step_matches_jnp_step(rng):
+    from repro.core import awp, projections as proj
+    w = jnp.asarray(rng.normal(size=(3, 16, 32)), jnp.float32)
+    x = np.asarray(rng.normal(size=(3, 128, 32)), np.float32)
+    c = jnp.asarray(np.einsum("bti,btj->bij", x, x) / 128)
+    project = lambda z, t: proj.topk_row(z, 16)
+    theta0 = ref.topk_row(w, 16)
+    res_jnp = awp.pgd_batched(w, c, project, theta0,
+                              awp.PGDConfig(max_iters=5, tol=0.0))
+    res_pal = awp.pgd_batched(w, c, project, theta0,
+                              awp.PGDConfig(max_iters=5, tol=0.0,
+                                            use_pallas=True, interpret=True))
+    np.testing.assert_allclose(np.asarray(res_pal.theta),
+                               np.asarray(res_jnp.theta),
+                               rtol=2e-4, atol=2e-4)
+
+
 @settings(max_examples=10, deadline=None)
 @given(st.integers(1, 60), st.integers(0, 2 ** 31 - 1))
 def test_property_topk_kernel_vs_oracle(k, seed):

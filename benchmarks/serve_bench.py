@@ -1,0 +1,110 @@
+"""Serving throughput: dense weights vs packed QTensor leaves.
+
+Compresses a tiny LM to int4 (RTN — quantization grid identical to the AWP
+packing, cheap to build), writes the packed checkpoint, and times batched
+prefill + greedy decode twice: once on the dense-dequantized params and
+once serving straight from the QTensor-leaf tree. Reports tok/s and the
+quantized-layer weight bytes resident in each param tree.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench [--smoke]
+
+Emits ``results/BENCH_serve.json`` via the shared emitter (CI uploads it
+next to the other BENCH artifacts). On CPU the packed path runs the
+reference dequant-matmul; on TPU it runs the fused Pallas kernel — the
+JSON records the backend.
+"""
+import argparse
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit_json
+from repro.checkpoint import load_packed_checkpoint, save_packed_checkpoint
+from repro.configs import get_tiny_config
+from repro.core.compress import compress_model
+from repro.core.specs import Policy, QuantSpec
+from repro.launch.serve import (make_step_fns, packed_weight_bytes,
+                                qtensor_leaves)
+from repro.models import build_model, make_batch
+
+
+def bench_serving(model, params, prompts, gen_len: int, reps: int = 2):
+    """(prefill tok/s, decode tok/s) for greedy generation, best of reps
+    (first rep also pays compilation)."""
+    b, prompt = prompts.shape
+    prefill, decode = make_step_fns(model)
+    best_pre = best_dec = 0.0
+    for _ in range(reps + 1):                      # +1 warm/compile pass
+        cache = model.init_cache(b, prompt + gen_len, jnp.float32)
+        t0 = time.perf_counter()
+        tok, cache = prefill(params, {"tokens": prompts}, cache)
+        jax.block_until_ready(tok)
+        t_pre = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        for _ in range(gen_len - 1):
+            tok, cache = decode(params, tok, cache)
+        jax.block_until_ready(tok)
+        t_dec = time.perf_counter() - t1
+        best_pre = max(best_pre, b * prompt / t_pre)
+        best_dec = max(best_dec, b * (gen_len - 1) / max(t_dec, 1e-9))
+    return best_pre, best_dec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama32-1b")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI sizes: batch 4, prompt 16, gen 8")
+    args = ap.parse_args()
+    if args.smoke:
+        args.batch, args.prompt_len, args.gen = 4, 16, 8
+
+    cfg = get_tiny_config(args.arch)
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    calib = [make_batch(cfg, jax.random.PRNGKey(1), 4, args.prompt_len)]
+    cp, report = compress_model(
+        model, params, calib,
+        Policy({"*": QuantSpec(method="rtn", bits=4, group_size=32)}))
+    path = save_packed_checkpoint(tempfile.mkdtemp(prefix="serve_bench_"),
+                                  0, cp, report)
+    packed_params, qts, _ = load_packed_checkpoint(path, params)
+    packed_b, dense_equiv = packed_weight_bytes(packed_params)
+    n_qleaves = len(qtensor_leaves(packed_params))
+    assert n_qleaves > 0, "packed tree has no QTensor leaves"
+
+    prompts = make_batch(cfg, jax.random.PRNGKey(2), args.batch,
+                         args.prompt_len)["tokens"]
+    dense_pre, dense_dec = bench_serving(model, cp, prompts, args.gen)
+    packed_pre, packed_dec = bench_serving(model, packed_params, prompts,
+                                           args.gen)
+
+    rows = [("dense", dense_pre, dense_dec, dense_equiv),
+            ("packed", packed_pre, packed_dec, packed_b)]
+    print(f"serve bench: {args.arch} tiny, batch={args.batch} "
+          f"prompt={args.prompt_len} gen={args.gen}")
+    for name, pre, dec, wb in rows:
+        print(f"  {name:7s} prefill {pre:8.0f} tok/s   decode {dec:8.0f} "
+              f"tok/s   quantized-layer weights {wb / 1e6:7.2f} MB")
+
+    out = emit_json("serve", {
+        "arch": args.arch,
+        "batch": args.batch, "prompt_len": args.prompt_len, "gen": args.gen,
+        "n_qtensor_leaves": n_qleaves,
+        "dense": {"prefill_tok_s": dense_pre, "decode_tok_s": dense_dec,
+                  "weight_bytes": dense_equiv},
+        "packed": {"prefill_tok_s": packed_pre, "decode_tok_s": packed_dec,
+                   "weight_bytes": packed_b},
+        "compression_x": dense_equiv / max(packed_b, 1),
+    })
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -17,6 +17,7 @@ Guarantees used by the fault-tolerance story (DESIGN.md §4):
 """
 from __future__ import annotations
 
+import itertools
 import json
 import os
 import shutil
@@ -73,10 +74,15 @@ def save_checkpoint(directory: str, step: int, tree: Any) -> str:
 
 def restore_checkpoint(path: str, target: Any,
                        shardings: Optional[Any] = None, *,
-                       _allow_packed: bool = False) -> Any:
+                       _allow_packed: bool = False,
+                       _skip_keys: frozenset = frozenset()) -> Any:
     """Restore into the structure of ``target``. If ``shardings`` (a pytree
     of NamedSharding matching target) is given, leaves are placed directly
-    onto the (possibly different) mesh — elastic restart."""
+    onto the (possibly different) mesh — elastic restart.
+
+    ``_skip_keys`` (internal, used by the QTensor-leaf packed loader) names
+    leaves whose stored dense arrays are NOT loaded; the target's own leaf
+    is passed through as a placeholder for the caller to replace."""
     if not _allow_packed:
         # a packed checkpoint's dense arrays have zeroed holes where the
         # QTensor codes live — loading it densely would silently serve
@@ -89,7 +95,9 @@ def restore_checkpoint(path: str, target: Any,
                         f"{path} is a packed checkpoint — load it with "
                         f"load_packed_checkpoint (serve with --packed)")
     with np.load(os.path.join(path, "arrays.npz")) as z:
-        data = {k: z[k] for k in z.files}
+        # skipped leaves' (zeroed-hole) entries are never decompressed —
+        # peak host memory stays at packed size for QTensor-leaf loads
+        data = {k: z[k] for k in z.files if k not in _skip_keys}
     paths = jax.tree_util.tree_flatten_with_path(target)[0]
     treedef = jax.tree_util.tree_structure(target)
     shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
@@ -97,6 +105,9 @@ def restore_checkpoint(path: str, target: Any,
     out = []
     for (path_k, leaf), sh in zip(paths, shard_leaves):
         key = jax.tree_util.keystr(path_k)
+        if key in _skip_keys:
+            out.append(leaf)              # placeholder; caller replaces it
+            continue
         if key not in data:
             raise KeyError(f"checkpoint missing leaf {key}")
         arr = data[key]
@@ -179,16 +190,78 @@ def save_packed_checkpoint(directory: str, step: int, params: Any,
                            extra_arrays=arrays, compress=True)
 
 
-def load_packed_checkpoint(path: str, target: Any):
+def _leaf_at(tree: Any, dict_path) -> Any:
+    node = tree
+    for k in dict_path:
+        node = node[k]
+    return node
+
+
+def _set_leaf(tree: Any, dict_path, value: Any) -> Any:
+    """Functional replacement of one dict-path leaf (any leaf type)."""
+    out = dict(tree)
+    key = dict_path[0]
+    if len(dict_path) == 1:
+        out[key] = value
+    else:
+        out[key] = _set_leaf(tree[key], dict_path[1:], value)
+    return out
+
+
+def _packable_groups(packed_meta: dict, target: Any):
+    """Group packed layers by param-tree leaf and split into leaves that can
+    become stacked QTensors vs layers that must materialize densely.
+
+    A leaf is QTensor-packable iff every slice of it is quantized (full
+    coverage of the leading stacked dims), with uniform bits / group_size /
+    col_scale presence / shape, and no sparsity mask (a masked weight is
+    dequant·mask, which packed codes alone can't reproduce).
+    Returns ``(packable, dense_names)`` where packable maps
+    ``dict_path -> [(idx, name, meta), ...]``.
+    """
+    from repro.core.compress import resolve_path
+    groups: dict = {}
+    for name, m in packed_meta.items():
+        dict_path, idx = resolve_path(tuple(m["path"]), m["layer"])
+        groups.setdefault(tuple(dict_path), []).append((idx, name, m))
+    packable, dense_names = {}, []
+    for dict_path, entries in groups.items():
+        metas = [m for _, _, m in entries]
+        leaf = _leaf_at(target, dict_path)
+        lead = tuple(getattr(leaf, "shape", ())[:-2])
+        full = set(itertools.product(*(range(n) for n in lead)))
+        uniform = (
+            not any(m["has_mask"] for m in metas)
+            and len({(m["bits"], m["group_size"], m["has_col_scale"],
+                      tuple(m["shape"])) for m in metas}) == 1
+            and all(len(idx) == len(lead) for idx, _, _ in entries)
+            and {idx for idx, _, _ in entries} == full)
+        if uniform:
+            packable[dict_path] = entries
+        else:
+            dense_names.extend(name for _, name, _ in entries)
+    return packable, dense_names
+
+
+def load_packed_checkpoint(path: str, target: Any, *,
+                           materialize: bool = False):
     """Load a packed checkpoint: ``(params, {name: QTensor}, manifest)``.
 
-    The returned params have every packed layer materialized from its codes
-    (``qt.dequant()``, masked if a sparsity mask was stored) — bitwise what
-    ``compress_model`` produced, with no re-quantization. The QTensor dict
-    feeds kernel-path serving via ``QTensor.kernel_matmul`` (which uses the
-    fused Pallas kernel for plain nibble-packed int4 and the reference
-    dequant otherwise — the raw kernel supports neither other bit widths
-    nor ``col_scale``).
+    By default (``materialize=False``) quantized slots come back as packed
+    :class:`~repro.quant.QTensor` **leaves** of the params tree — stacked
+    along the scanned block (and expert) dims, never expanded to dense
+    floats — and the model forward pass reads them directly through
+    ``repro.models.layers.linear_apply`` (fused Pallas dequant-matmul on
+    TPU). A leaf only stays packed when every slice of it is uniformly
+    quantized and unmasked (see serving docs); other packed layers fall
+    back to dense materialization for that leaf.
+
+    ``materialize=True`` is the legacy escape hatch: every packed layer is
+    expanded with ``qt.dequant()`` (masked if a sparsity mask was stored) —
+    bitwise what ``compress_model`` produced, with no re-quantization.
+
+    Either way the per-layer ``{name: QTensor}`` dict and the manifest are
+    returned alongside the params.
     """
     from repro.core.compress import set_linear
     from repro.quant import QTensor
@@ -199,25 +272,64 @@ def load_packed_checkpoint(path: str, target: Any):
             f"{path} is not a packed checkpoint (no 'packed' manifest "
             f"entry) — load it with restore_checkpoint / serve without "
             f"--packed")
-    params = restore_checkpoint(path, target, _allow_packed=True)
-    qtensors = {}
     packed_meta = manifest.get("packed", {})
     if not packed_meta:
-        return params, qtensors, manifest
+        return (restore_checkpoint(path, target, _allow_packed=True),
+                {}, manifest)
     with np.load(os.path.join(path, "packed.npz")) as z:
         data = {k: z[k] for k in z.files}
+
+    # per-layer QTensor views stay HOST-side (numpy children): the device
+    # copies are the stacked leaves below — building this dict with
+    # device arrays would double resident packed-weight HBM
+    qtensors = {}
     for name, m in packed_meta.items():
-        shape = tuple(m["shape"])
-        col_scale = (jax.numpy.asarray(data[_packed_key(name, "col_scale")])
-                     if m["has_col_scale"] else None)
-        qt = QTensor(
-            packed=jax.numpy.asarray(data[_packed_key(name, "packed")]),
-            scale=jax.numpy.asarray(data[_packed_key(name, "scale")]),
-            zero=jax.numpy.asarray(data[_packed_key(name, "zero")]),
+        qtensors[name] = QTensor(
+            packed=data[_packed_key(name, "packed")],
+            scale=data[_packed_key(name, "scale")],
+            zero=data[_packed_key(name, "zero")],
             bits=int(m["bits"]), group_size=int(m["group_size"]),
-            shape=shape, col_scale=col_scale)
-        qtensors[name] = qt
-        w = qt.dequant()
+            shape=tuple(m["shape"]),
+            col_scale=(data[_packed_key(name, "col_scale")]
+                       if m["has_col_scale"] else None))
+
+    packable: dict = {}
+    dense_names = list(packed_meta)
+    if not materialize:
+        packable, dense_names = _packable_groups(packed_meta, target)
+    skip = frozenset("".join(f"[{k!r}]" for k in dict_path)
+                     for dict_path in packable)
+    params = restore_checkpoint(path, target, _allow_packed=True,
+                                _skip_keys=skip)
+
+    # stacked QTensor leaves: codes/scales gathered host-side into one array
+    # per field, leading dims = the leaf's stacked (layer[, expert]) dims —
+    # no dense float is ever built for these layers
+    for dict_path, entries in packable.items():
+        lead = tuple(_leaf_at(target, dict_path).shape[:-2])
+        m0 = entries[0][2]
+
+        def stack(field):
+            first = data[_packed_key(entries[0][1], field)]
+            out = np.empty(lead + first.shape, first.dtype)
+            for idx, name, _ in entries:
+                out[idx] = data[_packed_key(name, field)]
+            return jax.numpy.asarray(out)
+
+        qt = QTensor(packed=stack("packed"), scale=stack("scale"),
+                     zero=stack("zero"), bits=int(m0["bits"]),
+                     group_size=int(m0["group_size"]),
+                     shape=tuple(m0["shape"]),
+                     col_scale=stack("col_scale")
+                     if m0["has_col_scale"] else None)
+        params = _set_leaf(params, list(dict_path), qt)
+
+    # remaining packed layers (masked / partially-quantized leaves, or
+    # everything under materialize=True): legacy dense expansion
+    for name in dense_names:
+        m = packed_meta[name]
+        shape = tuple(m["shape"])
+        w = qtensors[name].dequant()
         if m["has_mask"]:
             bits = np.unpackbits(data[_packed_key(name, "mask")],
                                  count=shape[0] * shape[1])
@@ -274,13 +386,13 @@ class CheckpointManager:
         step = int(os.path.basename(path).split("_")[1])  # the step we load
         return restore_checkpoint(path, target, shardings), step
 
-    def restore_latest_packed(self, target):
+    def restore_latest_packed(self, target, *, materialize: bool = False):
         """(params, {name: QTensor}, manifest) from the newest packed
         checkpoint, or (None, None, None) if the directory is empty."""
         path = self.latest_path()
         if path is None:
             return None, None, None
-        return load_packed_checkpoint(path, target)
+        return load_packed_checkpoint(path, target, materialize=materialize)
 
     def _rotate(self):
         steps = sorted(int(d.split("_")[1]) for d in os.listdir(self.directory)

@@ -41,19 +41,28 @@ def _kernel(x_ref, wp_ref, scale_ref, zero_ref, y_ref, acc_ref,
         y_ref[...] = acc_ref[...].astype(y_ref.dtype)
 
 
+def _auto_bm(m: int) -> int:
+    """M tile for the serving shapes: full 128 for prefill-sized M, the
+    smallest f32-sublane multiple (8) covering M for decode (M = batch·1 —
+    a 128-row tile would be >90% padding compute)."""
+    return 128 if m >= 128 else -(-m // 8) * 8
+
+
 def dequant_matmul(x: jax.Array, packed: jax.Array, scale: jax.Array,
                    zero: jax.Array, *, group_size: int = 128,
-                   bm: int = 128, bn: int = 128, bk: int = 256,
+                   bm: int = 0, bn: int = 128, bk: int = 256,
                    interpret: bool = False) -> jax.Array:
     """x: (M, K) f32/bf16; packed: (N, K//2) uint8; scale/zero: (N, K//group).
-    Returns (M, N) = x @ dequant(W)ᵀ."""
+    Returns (M, N) = x @ dequant(W)ᵀ. ``bm=0`` (default) picks the M tile
+    from the shape — decode-shaped calls get an 8-row tile, not 128."""
     m, k = x.shape
     n = packed.shape[0]
     assert packed.shape[1] * 2 == k
     assert scale.shape == (n, k // group_size) == zero.shape
     bk = max(group_size, (min(bk, k) // group_size) * group_size)
     assert bk % group_size == 0 and bk % 2 == 0
-    bm, bn = min(bm, m), min(bn, n)
+    bm = bm or _auto_bm(m)
+    bm, bn = min(bm, -(-m // 8) * 8), min(bn, n)
     pm, pn, pk = (-m) % bm, (-n) % bn, (-k) % bk
     if pm or pk:
         x = jnp.pad(x, ((0, pm), (0, pk)))

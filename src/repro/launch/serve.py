@@ -5,8 +5,12 @@ weights (what the paper compresses models FOR).
       --batch 8 --prompt-len 32 --gen 32 [--ckpt results/compressed_ckpt]
 
 With ``--packed`` the checkpoint is a packed QTensor checkpoint (written by
-``repro.launch.compress --save-packed``): the quantized layers are loaded
-straight from their integer codes — no dense floats are re-quantized.
+``repro.launch.compress --save-packed``): quantized layers stay packed
+``QTensor`` leaves of the param tree end-to-end — the jitted forward pass
+reads the integer codes through the fused dequant-matmul, no dense floats
+are ever materialized for them (``--materialize`` restores the legacy
+dense expansion). Greedy sampling runs inside the jitted prefill/decode
+steps, so decode transfers one int32 per request per step, not the logits.
 """
 from __future__ import annotations
 
@@ -21,6 +25,42 @@ from repro.checkpoint import CheckpointManager
 from repro.configs import get_config, get_tiny_config
 from repro.data import DataConfig, ZipfMarkov
 from repro.models import build_model
+from repro.quant import QTensor
+
+
+def qtensor_leaves(params) -> list:
+    """The QTensor leaves of a params tree. ``is_leaf`` stops traversal AT
+    each QTensor so stacked leaves are counted once (their children carry
+    the block/expert dims)."""
+    return [l for l in jax.tree.leaves(
+                params, is_leaf=lambda x: isinstance(x, QTensor))
+            if isinstance(l, QTensor)]
+
+
+def packed_weight_bytes(params) -> tuple:
+    """(packed_bytes, dense_equiv_bytes) over the QTensor leaves of params."""
+    packed = dense = 0
+    for leaf in qtensor_leaves(params):
+        packed += leaf.nbytes()
+        nibble = leaf.bits == 4 and leaf.packed.shape[-1] * 2 == leaf.shape[1]
+        dense += leaf.packed.size * (2 if nibble else 1) * 4
+    return packed, dense
+
+
+def make_step_fns(model):
+    """Jitted (prefill_fn, decode_fn) with greedy token selection folded in:
+    each returns ``(tokens (B,1) int32, cache)`` — full logits never leave
+    the device during decode."""
+    def prefill_fn(params, batch, cache):
+        logits, cache = model.prefill(params, batch, cache)
+        return jnp.argmax(logits[:, -1], -1)[:, None], cache
+
+    def decode_fn(params, tok, cache):
+        logits, cache = model.decode_step(params, tok, cache)
+        return jnp.argmax(logits[:, -1], -1)[:, None], cache
+
+    return (jax.jit(prefill_fn),
+            jax.jit(decode_fn, donate_argnums=2))
 
 
 def main():
@@ -33,6 +73,9 @@ def main():
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--packed", action="store_true",
                     help="--ckpt is a packed QTensor checkpoint")
+    ap.add_argument("--materialize", action="store_true",
+                    help="with --packed: expand quantized layers to dense "
+                         "floats (legacy path) instead of serving packed")
     args = ap.parse_args()
     if args.packed and not args.ckpt:
         ap.error("--packed requires --ckpt")
@@ -42,14 +85,23 @@ def main():
     params = model.init(jax.random.PRNGKey(0))
     if args.ckpt and args.packed:
         params, qts, manifest = CheckpointManager(
-            args.ckpt).restore_latest_packed(params)
+            args.ckpt).restore_latest_packed(params,
+                                             materialize=args.materialize)
         if params is None:
             raise SystemExit(f"[serve] no checkpoint under {args.ckpt}")
         dense = sum(int(np.prod(qt.shape)) * 4 for qt in qts.values())
         packed_b = sum(qt.nbytes() for qt in qts.values())
+        resident, _ = packed_weight_bytes(params)
         print(f"[serve] loaded packed checkpoint step {manifest['step']}: "
               f"{len(qts)} QTensor layers, "
               f"{dense / 1e6:.1f}MB dense -> {packed_b / 1e6:.1f}MB packed")
+        note = ""
+        if args.materialize:
+            note = " (materialized dense — legacy path)"
+        elif resident == 0:
+            note = " (no leaf qualified for packing — serving dense)"
+        print(f"[serve] {resident / 1e6:.1f}MB packed weights resident in "
+              f"the param tree" + note)
     elif args.ckpt:
         restored, step = CheckpointManager(args.ckpt).restore_latest(
             {"params": params})
@@ -64,19 +116,17 @@ def main():
     max_len = args.prompt_len + args.gen
     cache = model.init_cache(args.batch, max_len, jnp.float32)
 
-    prefill = jax.jit(model.prefill)
-    decode = jax.jit(model.decode_step, donate_argnums=2)
+    prefill, decode = make_step_fns(model)
 
     t0 = time.time()
-    logits, cache = prefill(params, {"tokens": jnp.asarray(prompts)}, cache)
-    tok = jnp.argmax(logits[:, -1], -1)[:, None]
+    tok, cache = prefill(params, {"tokens": jnp.asarray(prompts)}, cache)
+    jax.block_until_ready(tok)
     t_prefill = time.time() - t0
 
     out = [tok]
     t1 = time.time()
     for _ in range(args.gen - 1):
-        logits, cache = decode(params, tok, cache)
-        tok = jnp.argmax(logits[:, -1], -1)[:, None]
+        tok, cache = decode(params, tok, cache)
         out.append(tok)
     jax.block_until_ready(tok)
     t_decode = time.time() - t1

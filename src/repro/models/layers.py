@@ -17,7 +17,48 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.quant import QTensor
 from repro.sharding import ShardingRules, NO_RULES, hint
+
+
+# ---------------------------------------------------------------------------
+# linear dispatch: dense array or packed QTensor, one entry point
+# ---------------------------------------------------------------------------
+
+def linear_apply(w, x: jax.Array) -> jax.Array:
+    """y = x @ w — the single dispatch every model linear routes through.
+
+    ``w`` is either a dense ``(d_in, d_out)`` array (stored orientation) or
+    a packed :class:`~repro.quant.QTensor` in paper orientation
+    ``(d_out, d_in)``, whose matmul contracts against dequantized rows —
+    the same product, read at ~4 bits/weight. QTensor execution follows
+    ``repro.quant.matmul_impl``: fused Pallas dequant-matmul on TPU,
+    reference dequant elsewhere, ``"kernel"`` (interpret mode) for tests.
+    """
+    if isinstance(w, QTensor):
+        lead = x.shape[:-1]
+        y = w.matmul_dispatch(x.reshape(-1, x.shape[-1]))
+        return y.reshape(*lead, y.shape[-1]).astype(x.dtype)
+    return x @ w
+
+
+def expert_apply(w, x: jax.Array, *, per_expert: bool = False) -> jax.Array:
+    """Batched per-expert linear: x (T, d) → (T, E, f), or per-expert
+    inputs x (E, T, d) → (E, T, f) with ``per_expert=True``.
+
+    ``w`` is a stacked dense ``(E, d, f)`` expert weight or a QTensor leaf
+    whose children carry a leading expert dim (aux shape stays the
+    per-expert ``(f, d)``); the QTensor path vmaps the dequant-matmul over
+    the expert axis — experts stay packed in HBM on the decode path. This
+    is the single per-expert dispatch site (the MoE down-proj feeds its
+    per-expert activations through ``per_expert=True``)."""
+    if isinstance(w, QTensor):
+        y = jax.vmap(lambda qt, xe: qt.matmul_dispatch(xe),
+                     in_axes=(0, 0 if per_expert else None))(w, x)
+        return (y if per_expert else y.transpose(1, 0, 2)).astype(x.dtype)
+    if per_expert:
+        return jnp.einsum("etd,edf->etf", x, w)
+    return jnp.einsum("td,edf->tef", x, w)
 
 
 # ---------------------------------------------------------------------------
@@ -243,9 +284,9 @@ def attn_apply(p, x, cfg, rules: ShardingRules = NO_RULES, *,
     xn = rmsnorm(x, p["norm"], cfg.norm_eps)
     if capture is not None:
         capture["attn_in"] = xn
-    q = (xn @ p["wq"]).reshape(b, s, h, hd)
-    k = (xn @ p["wk"]).reshape(b, s, hk, hd)
-    v = (xn @ p["wv"]).reshape(b, s, hk, hd)
+    q = linear_apply(p["wq"], xn).reshape(b, s, h, hd)
+    k = linear_apply(p["wk"], xn).reshape(b, s, hk, hd)
+    v = linear_apply(p["wv"], xn).reshape(b, s, hk, hd)
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
     q = rope(q, positions, cfg.rope_theta)
@@ -277,7 +318,7 @@ def attn_apply(p, x, cfg, rules: ShardingRules = NO_RULES, *,
     out = hint(out, rules, ("batch", None, "tp", None))
     if capture is not None:
         capture["attn_out_in"] = out.reshape(b, s, h * hd)
-    y = out.reshape(b, s, h * hd) @ p["wo"]
+    y = linear_apply(p["wo"], out.reshape(b, s, h * hd))
     return y.astype(x.dtype), new_kv
 
 
@@ -286,15 +327,15 @@ def mlp_apply(p, x, cfg, rules: ShardingRules = NO_RULES, *, capture=None):
     if capture is not None:
         capture["mlp_in"] = xn
     if cfg.mlp_act == "silu":
-        hdn = mlp_act(xn @ p["wg"], "silu") * (xn @ p["wu"])
+        hdn = mlp_act(linear_apply(p["wg"], xn), "silu") * linear_apply(p["wu"], xn)
     else:
-        hdn = mlp_act(xn @ p["wu"], cfg.mlp_act)
+        hdn = mlp_act(linear_apply(p["wu"], xn), cfg.mlp_act)
     hdn = hint(hdn, rules, ("batch", None, "tp"))
     if capture is not None:
         capture["mlp_down_in"] = hdn
-    return (hdn @ p["wd"]).astype(x.dtype)
+    return linear_apply(p["wd"], hdn).astype(x.dtype)
 
 
 __all__ = ["dense_init", "embed_init", "rmsnorm", "rope", "mlp_act",
            "flash_attention", "decode_attention", "attn_params", "mlp_params",
-           "attn_apply", "mlp_apply"]
+           "attn_apply", "mlp_apply", "linear_apply", "expert_apply"]

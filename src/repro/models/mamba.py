@@ -159,7 +159,7 @@ def mamba_apply(p, x, cfg: ModelConfig, rules: ShardingRules = NO_RULES, *,
     xn = L.rmsnorm(x, p["norm"], cfg.norm_eps)
     if capture is not None:
         capture["mamba_in"] = xn
-    xz = xn @ p["in_proj"]
+    xz = L.linear_apply(p["in_proj"], xn)
     xs, z = jnp.split(xz, 2, axis=-1)                 # (B, L, di) each
     xs = hint(xs, rules, ("batch", None, "tp"))
 
@@ -181,7 +181,7 @@ def mamba_apply(p, x, cfg: ModelConfig, rules: ShardingRules = NO_RULES, *,
     y = y * jax.nn.silu(z)
     if capture is not None:
         capture["mamba_out_in"] = y
-    out = (y @ p["out_proj"]).astype(x.dtype)
+    out = L.linear_apply(p["out_proj"], y).astype(x.dtype)
     return out, new_state
 
 

@@ -114,8 +114,8 @@ def mamba2_apply(p, x, cfg: ModelConfig, rules: ShardingRules = NO_RULES, *,
     xn = L.rmsnorm(x, p["norm"], cfg.norm_eps)
     if capture is not None:
         capture["mamba2_in"] = xn
-    z = xn @ p["wz"]
-    xs = xn @ p["wx"]
+    z = L.linear_apply(p["wz"], xn)
+    xs = L.linear_apply(p["wx"], xn)
     xs = hint(xs, rules, ("batch", None, "tp"))
     bc_all = xn @ p["wbc"]
     bcv, ccv = bc_all[..., :n], bc_all[..., n:]
@@ -141,7 +141,7 @@ def mamba2_apply(p, x, cfg: ModelConfig, rules: ShardingRules = NO_RULES, *,
     y = L.rmsnorm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
     if capture is not None:
         capture["mamba2_out_in"] = y
-    out = (y @ p["out_proj"]).astype(x.dtype)
+    out = L.linear_apply(p["out_proj"], y).astype(x.dtype)
     new_state = None if state is None else {"conv": new_conv, "ssm": h_last}
     return out, new_state
 

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from repro import compat
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
+from repro.quant import QTensor
 from repro.sharding import ShardingRules, NO_RULES, hint
 
 
@@ -130,19 +131,26 @@ def moe_apply_dense(p, x, cfg: ModelConfig, rules: ShardingRules = NO_RULES,
     ge = ge.at[jnp.arange(t)[:, None], idx].set(gates)
     ge = hint(ge, rules, ("batch", None))
     # all-expert compute, gather-weighted (decode path: memory-bound, see
-    # DESIGN.md §4 — every expert weight is read once regardless of routing).
-    # Expert weights are TP-sharded on E (many experts) or f (few experts,
+    # DESIGN.md §4 — every expert weight is read once regardless of routing;
+    # QTensor expert leaves cut that read to ~4 bits/weight). Dense expert
+    # weights are TP-sharded on E (many experts) or f (few experts,
     # moe_logical_axes); either way the einsums partition without re-layout.
-    up = jnp.einsum("td,edf->tef", xf, p["wu"])
+    up = L.expert_apply(p["wu"], xf)
     if cfg.mlp_act == "silu":
-        up = L.mlp_act(jnp.einsum("td,edf->tef", xf, p["wg"]), "silu") * up
+        up = L.mlp_act(L.expert_apply(p["wg"], xf), "silu") * up
     else:
         up = L.mlp_act(up, cfg.mlp_act)
     if capture is not None:
         capture["moe_in"] = xf
         capture["moe_mask"] = ge > 0
         capture["moe_up"] = up          # (T, E, f) pre-down activations
-    y = jnp.einsum("tef,efd,te->td", up, p["wd"], ge.astype(up.dtype))
+    wd = p["wd"]
+    if isinstance(wd, QTensor):         # packed experts: stacked dequant-matmul
+        ye = L.expert_apply(wd, up.transpose(1, 0, 2),
+                            per_expert=True)         # (E, T, d)
+        y = jnp.einsum("etd,te->td", ye, ge.astype(ye.dtype))
+    else:
+        y = jnp.einsum("tef,efd,te->td", up, wd, ge.astype(up.dtype))
     return y.reshape(b, s, d).astype(x.dtype)
 
 
@@ -228,8 +236,12 @@ def moe_apply_a2a(p, x, cfg: ModelConfig, rules: ShardingRules) -> jax.Array:
 
 def moe_apply(p, x, cfg: ModelConfig, rules: ShardingRules = NO_RULES, *,
               capture: Optional[dict] = None, prefer_a2a: bool = True) -> jax.Array:
-    """Auto-select the execution path (DESIGN.md §4)."""
-    if rules.mesh is None or capture is not None or not prefer_a2a:
+    """Auto-select the execution path (DESIGN.md §4). Packed QTensor expert
+    weights (any of wu/wd/wg) always take the masked-dense path — the a2a
+    slot re-layout reshapes raw weight arrays, which packed codes don't
+    support."""
+    packed = any(isinstance(p.get(k), QTensor) for k in ("wu", "wd", "wg"))
+    if rules.mesh is None or capture is not None or not prefer_a2a or packed:
         return moe_apply_dense(p, x, cfg, rules, capture=capture)
     b, s, _ = x.shape
     tp = rules.axis_size(rules.tp_axis or ())

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
+from repro.quant import QTensor
 from repro.sharding import ShardingRules, NO_RULES, hint  # noqa: F401 (re-export)
 
 Params = Dict[str, Any]
@@ -136,6 +137,8 @@ class DenseModel:
         return L.rmsnorm(h, params["final_norm"], self.cfg.norm_eps)
 
     def _head_w(self, params):
+        """Dense (d_model, vocab) head weight — or a QTensor leaf when the
+        head was quantized; every consumer goes through L.linear_apply."""
         if self.cfg.tie_embeddings:
             return params["embed"].T
         return params["lm_head"]
@@ -149,8 +152,8 @@ class DenseModel:
         return jnp.where(iota < v, logits, jnp.finfo(logits.dtype).min)
 
     def logits(self, params, batch) -> jax.Array:
-        return self._mask_pad(self.hidden_states(params, batch)
-                              @ self._head_w(params))
+        return self._mask_pad(L.linear_apply(self._head_w(params),
+                                             self.hidden_states(params, batch)))
 
     # -- training loss (chunked xent, full logits never built) -------------
     def loss(self, params, batch) -> tuple:
@@ -211,7 +214,7 @@ class DenseModel:
         positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s)) + cache["pos"]
         h, cache = self._cached_scan(params, h, cache, positions)
         h_last = L.rmsnorm(h[:, -1:, :], params["final_norm"], self.cfg.norm_eps)
-        return self._mask_pad(h_last @ self._head_w(params)), cache
+        return self._mask_pad(L.linear_apply(self._head_w(params), h_last)), cache
 
     def decode_step(self, params, tokens, cache):
         """One decode step. tokens: (B, 1) int32."""
@@ -220,7 +223,7 @@ class DenseModel:
         positions = jnp.broadcast_to(cache["pos"][None, None], (b, 1))
         h, cache = self._cached_scan(params, h, cache, positions)
         h = L.rmsnorm(h, params["final_norm"], self.cfg.norm_eps)
-        return self._mask_pad(h @ self._head_w(params)), cache
+        return self._mask_pad(L.linear_apply(self._head_w(params), h)), cache
 
     # -- compression protocol ------------------------------------------------
     def num_blocks(self) -> int:
@@ -273,11 +276,13 @@ def chunked_xent(h: jax.Array, w_head: jax.Array, labels: jax.Array, *,
     hc = h.reshape(b, n, chunk, d).transpose(1, 0, 2, 3)
     lc = labels.reshape(b, n, chunk).transpose(1, 0, 2)
 
+    w32 = w_head if isinstance(w_head, QTensor) else w_head.astype(jnp.float32)
+
     @jax.checkpoint   # recompute chunk logits in backward (never resident)
     def body(carry, xs):
         nll_acc, cnt_acc = carry
         hx, lx = xs
-        logits = hint(hx.astype(jnp.float32) @ w_head.astype(jnp.float32),
+        logits = hint(L.linear_apply(w32, hx.astype(jnp.float32)),
                       rules, ("batch", None, "tp"))
         vocab_iota = jnp.arange(logits.shape[-1])
         if vocab and logits.shape[-1] != vocab:

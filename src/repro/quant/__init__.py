@@ -1,3 +1,5 @@
-from repro.quant.qtensor import QTensor, pack_int4, unpack_int4
+from repro.quant.qtensor import (QTensor, matmul_impl, pack_int4,
+                                 set_matmul_impl, unpack_int4)
 
-__all__ = ["QTensor", "pack_int4", "unpack_int4"]
+__all__ = ["QTensor", "matmul_impl", "pack_int4", "set_matmul_impl",
+           "unpack_int4"]

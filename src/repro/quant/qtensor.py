@@ -11,15 +11,67 @@ AWQ-style methods quantize in a per-input-channel scaled space
 (W' = W·diag(s)); the optional ``col_scale`` field stores that s so the
 codes live on the scaled grid and ``dequant()`` folds it back — packing
 stays exact instead of re-quantizing on an unscaled grid.
+
+``QTensor`` is registered as a jax pytree node (children = the arrays,
+aux = bits / group_size / logical shape), so packed weights live directly
+as leaves of a model's param tree: they flow through ``jax.jit`` /
+``jax.lax.scan`` / donation, stack per-block for the scanned transformer
+(children grow leading dims; the aux shape stays the per-layer logical
+``(d_out, d_in)``), and slice back out via ``tree.map(lambda x: x[i], …)``.
+``matmul_dispatch`` picks the execution path per backend — see
+:func:`matmul_impl`.
 """
 from __future__ import annotations
 
+import contextlib
 from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import projections as proj
+
+
+# ---------------------------------------------------------------------------
+# matmul implementation switch (module state, read at trace time — static
+# under jit): "auto" = fused Pallas kernel on TPU, reference dequant-matmul
+# everywhere else; "kernel" forces the kernel (interpret mode off-TPU — the
+# test path); "reference" forces the jnp dequant.
+#
+# CAVEAT: the mode is baked in when a jitted function first traces and is
+# NOT part of its cache key — switching afterwards does not retrace
+# already-compiled functions. Set the mode (or enter the context) BEFORE
+# jitting / first call, as the parity tests do.
+# ---------------------------------------------------------------------------
+
+_MATMUL_IMPL = "auto"
+_IMPLS = ("auto", "kernel", "reference")
+
+
+def set_matmul_impl(mode: str) -> str:
+    """Set the QTensor matmul implementation; returns the previous mode."""
+    global _MATMUL_IMPL
+    if mode not in _IMPLS:
+        raise ValueError(f"matmul impl must be one of {_IMPLS}, got {mode!r}")
+    prev, _MATMUL_IMPL = _MATMUL_IMPL, mode
+    return prev
+
+
+@contextlib.contextmanager
+def matmul_impl(mode: str):
+    """Context manager scoping :func:`set_matmul_impl` (tests force
+    ``"kernel"`` to exercise the Pallas path in interpret mode on CPU)."""
+    prev = set_matmul_impl(mode)
+    try:
+        yield
+    finally:
+        set_matmul_impl(prev)
+
+
+def _resolved_impl() -> str:
+    if _MATMUL_IMPL != "auto":
+        return _MATMUL_IMPL
+    return "kernel" if jax.default_backend() == "tpu" else "reference"
 
 
 def pack_int4(q: jax.Array) -> jax.Array:
@@ -103,18 +155,30 @@ class QTensor(NamedTuple):
     def kernel_matmul(self, x: jax.Array) -> jax.Array:
         """x @ Wᵀ via the fused Pallas dequant-matmul where supported.
 
-        The kernel handles nibble-packed int4 without a per-channel scale;
-        every other layout (bits≠4, odd d_in, AWQ-style ``col_scale``)
-        falls back to the reference ``matmul`` — callers get correct
-        results either way.
+        Handles nibble-packed int4 including AWQ-style ``col_scale`` layers:
+        dequant divides by s per input column, so
+        ``x @ deq.T == (x / s) @ base.T`` and the kernel runs on pre-scaled
+        activations. Only bits≠4 / odd d_in fall back to the reference
+        ``matmul`` — callers get correct results either way.
         """
         nibble_packed = (self.bits == 4
                          and self.packed.shape[-1] * 2 == self.shape[1])
-        if not nibble_packed or self.col_scale is not None:
+        if not nibble_packed:
             return self.matmul(x)
+        if self.col_scale is not None:
+            x = (x / self.col_scale).astype(x.dtype)
         from repro.kernels import ops    # local: avoid import cycle
         return ops.dequant_matmul(x, self.packed, self.scale, self.zero,
                                   self.group_size)
+
+    def matmul_dispatch(self, x: jax.Array) -> jax.Array:
+        """x @ Wᵀ on the active implementation (see :func:`matmul_impl`):
+        fused Pallas kernel on TPU, reference dequant elsewhere. This is
+        what ``repro.models.layers.linear_apply`` calls in the serving
+        forward pass."""
+        if _resolved_impl() == "reference":
+            return self.matmul(x)
+        return self.kernel_matmul(x)
 
     def nbytes(self) -> int:
         n = self.packed.size * self.packed.dtype.itemsize
@@ -124,4 +188,37 @@ class QTensor(NamedTuple):
         return n
 
 
-__all__ = ["QTensor", "pack_int4", "unpack_int4"]
+# ---------------------------------------------------------------------------
+# pytree registration: children = the arrays, aux = the static metadata.
+# Explicit registration overrides the NamedTuple fallback, keeping
+# bits/group_size/shape OUT of the leaf set — a QTensor leaf survives
+# jit/scan/vmap/donation with its integer metadata static, and stacked
+# per-block leaves (children with leading dims) scan like any other param.
+# ---------------------------------------------------------------------------
+
+def _qt_flatten_with_keys(qt: QTensor):
+    children = ((jax.tree_util.GetAttrKey("packed"), qt.packed),
+                (jax.tree_util.GetAttrKey("scale"), qt.scale),
+                (jax.tree_util.GetAttrKey("zero"), qt.zero),
+                (jax.tree_util.GetAttrKey("col_scale"), qt.col_scale))
+    return children, (qt.bits, qt.group_size, qt.shape)
+
+
+def _qt_flatten(qt: QTensor):
+    return ((qt.packed, qt.scale, qt.zero, qt.col_scale),
+            (qt.bits, qt.group_size, qt.shape))
+
+
+def _qt_unflatten(aux, children) -> QTensor:
+    bits, group_size, shape = aux
+    packed, scale, zero, col_scale = children
+    return QTensor(packed=packed, scale=scale, zero=zero, bits=bits,
+                   group_size=group_size, shape=shape, col_scale=col_scale)
+
+
+jax.tree_util.register_pytree_with_keys(QTensor, _qt_flatten_with_keys,
+                                        _qt_unflatten, _qt_flatten)
+
+
+__all__ = ["QTensor", "matmul_impl", "pack_int4", "set_matmul_impl",
+           "unpack_int4"]

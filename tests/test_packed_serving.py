@@ -1,0 +1,282 @@
+"""QTensor-native serving: pytree registration, stacked per-block QTensor
+leaves from packed checkpoints, packed-vs-dense logits parity through
+prefill + decode_step (interpret-mode kernel), and the col_scale /
+decode-tile kernel paths."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_tiny_config
+from repro.core.compress import compress_model
+from repro.core.specs import JointSpec, Policy, QuantSpec
+from repro.models import build_model, make_batch
+from repro.models.layers import expert_apply, linear_apply
+from repro.quant import QTensor, matmul_impl
+
+
+def _qt(rng, d_out=16, d_in=64, bits=4, group=32, **kw):
+    w = jnp.asarray(rng.normal(size=(d_out, d_in)), jnp.float32)
+    return w, QTensor.from_dense(w, bits, group, **kw)
+
+
+# ---------------------------------------------------------------------------
+# pytree registration
+# ---------------------------------------------------------------------------
+
+def test_qtensor_is_pytree_node(rng):
+    w, qt = _qt(rng)
+    leaves = jax.tree.leaves(qt)
+    assert len(leaves) == 3                      # packed/scale/zero, no aux
+    assert all(hasattr(l, "dtype") for l in leaves)
+    qt2 = jax.tree.map(lambda x: x, qt)          # identity roundtrip
+    assert isinstance(qt2, QTensor)
+    assert (qt2.bits, qt2.group_size, qt2.shape) == (4, 32, (16, 64))
+    np.testing.assert_array_equal(np.asarray(qt2.packed), np.asarray(qt.packed))
+    # col_scale participates as a child when present
+    _, qs = _qt(rng, col_scale=jnp.ones((64,), jnp.float32))
+    assert len(jax.tree.leaves(qs)) == 4
+
+
+def test_qtensor_through_jit_and_vmap(rng):
+    w, qt = _qt(rng)
+    x = jnp.asarray(rng.normal(size=(8, 64)), jnp.float32)
+
+    @jax.jit
+    def f(qt, x):
+        assert qt.bits == 4 and qt.shape == (16, 64)   # aux stays static
+        return qt.matmul(x)
+
+    np.testing.assert_allclose(np.asarray(f(qt, x)), np.asarray(x @ qt.dequant().T),
+                               rtol=1e-5, atol=1e-5)
+    # stacked children + vmap over the leading dim
+    stacked = jax.tree.map(lambda a: jnp.stack([a, a, a]), qt)
+    assert stacked.packed.shape == (3, 16, 32)
+    y = jax.vmap(lambda q: q.matmul(x))(stacked)
+    assert y.shape == (3, 8, 16)
+    # tree.map slicing recovers a per-item QTensor (the block_slice pattern)
+    sl = jax.tree.map(lambda a: a[1], stacked)
+    assert isinstance(sl, QTensor) and sl.packed.shape == (16, 32)
+    np.testing.assert_array_equal(np.asarray(sl.dequant()),
+                                  np.asarray(qt.dequant()))
+
+
+def test_qtensor_scan_over_stacked_leaves(rng):
+    _, qt = _qt(rng)
+    stacked = jax.tree.map(lambda a: jnp.stack([a, a]), qt)
+    x = jnp.asarray(rng.normal(size=(4, 64)), jnp.float32)
+
+    def body(c, q):
+        return c + q.matmul(x).sum(), None
+
+    total, _ = jax.lax.scan(body, jnp.float32(0.0), stacked)
+    np.testing.assert_allclose(float(total), 2 * float(qt.matmul(x).sum()),
+                               rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# linear_apply / expert_apply dispatch
+# ---------------------------------------------------------------------------
+
+def test_linear_apply_dense_and_qtensor_agree(rng):
+    w, qt = _qt(rng)
+    x = jnp.asarray(rng.normal(size=(2, 5, 64)), jnp.float32)
+    y_dense = linear_apply(qt.dequant().T, x)          # stored orientation
+    y_packed = linear_apply(qt, x)
+    assert y_packed.shape == (2, 5, 16)
+    np.testing.assert_allclose(np.asarray(y_packed), np.asarray(y_dense),
+                               rtol=1e-5, atol=1e-5)
+    with matmul_impl("kernel"):                        # interpret-mode Pallas
+        y_kernel = linear_apply(qt, x)
+    np.testing.assert_allclose(np.asarray(y_kernel), np.asarray(y_dense),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_expert_apply_matches_einsum(rng):
+    ws = [jnp.asarray(rng.normal(size=(24, 64)), jnp.float32)
+          for _ in range(3)]                           # per-expert (f, d)
+    qts = [QTensor.from_dense(w, 4, 32) for w in ws]
+    stacked = jax.tree.map(lambda *a: jnp.stack(a), *qts)
+    x = jnp.asarray(rng.normal(size=(6, 64)), jnp.float32)
+    dense = jnp.stack([q.dequant().T for q in qts])    # (E, d, f)
+    ref = jnp.einsum("td,edf->tef", x, dense)
+    out = expert_apply(stacked, x)
+    assert out.shape == (6, 3, 24)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# kernel paths: col_scale pre-scaling, decode-shaped tiles
+# ---------------------------------------------------------------------------
+
+def test_kernel_matmul_col_scale_uses_kernel(rng):
+    s = jnp.asarray(np.exp(rng.normal(0, 1, size=64)), jnp.float32)
+    w, qt = _qt(rng, col_scale=s)
+    x = jnp.asarray(rng.normal(size=(4, 64)), jnp.float32)
+    ref = qt.matmul(x)
+    out = qt.kernel_matmul(x)                          # must NOT fall back
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+    # odd d_in still falls back to the reference dequant
+    w_odd = jnp.asarray(rng.normal(size=(4, 33)), jnp.float32)
+    qt_odd = QTensor.from_dense(w_odd, 4, 11)
+    x_odd = jnp.asarray(rng.normal(size=(2, 33)), jnp.float32)
+    np.testing.assert_allclose(np.asarray(qt_odd.kernel_matmul(x_odd)),
+                               np.asarray(qt_odd.matmul(x_odd)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_decode_shaped_kernel_tiles(rng):
+    """Small-M (decode) calls pick an 8-row tile and stay correct."""
+    from repro.kernels.dequant_matmul import _auto_bm, dequant_matmul
+    assert _auto_bm(1) == 8 and _auto_bm(8) == 8
+    assert _auto_bm(9) == 16 and _auto_bm(128) == 128 and _auto_bm(4096) == 128
+    w, qt = _qt(rng, d_out=32, d_in=128, group=32)
+    for m in (1, 3, 8):
+        x = jnp.asarray(rng.normal(size=(m, 128)), jnp.float32)
+        out = dequant_matmul(x, qt.packed, qt.scale, qt.zero,
+                             group_size=32, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(qt.matmul(x)),
+                                   rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# packed checkpoint → QTensor leaves → serving parity
+# ---------------------------------------------------------------------------
+
+def _compress_and_save(tmp_path, arch="llama32-1b", policy=None):
+    from repro.checkpoint import save_packed_checkpoint
+    cfg = get_tiny_config(arch)
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    batches = [make_batch(cfg, jax.random.PRNGKey(7), 2, 24)]
+    policy = policy or Policy({"*.attn.*": QuantSpec(bits=8, group_size=32),
+                               "*.mlp.*": QuantSpec(bits=4, group_size=32)})
+    cp, report = compress_model(model, params, batches, policy)
+    path = save_packed_checkpoint(str(tmp_path / "ck"), 0, cp, report)
+    return cfg, model, params, batches, cp, report, path
+
+
+def test_load_packed_checkpoint_returns_qtensor_leaves(tmp_path):
+    from repro.checkpoint import load_packed_checkpoint
+    cfg, model, params, batches, cp, report, path = _compress_and_save(tmp_path)
+    target = model.init(jax.random.PRNGKey(1))
+    loaded, qts, manifest = load_packed_checkpoint(path, target)
+    blocks = loaded["blocks"]
+    # every packed layer lives as a stacked QTensor leaf — no dense float
+    for sub, names in (("attn", ("wq", "wk", "wv", "wo")),
+                       ("mlp", ("wg", "wu", "wd"))):
+        for n in names:
+            leaf = blocks[sub][n]
+            assert isinstance(leaf, QTensor), (sub, n)
+            assert leaf.packed.shape[0] == cfg.num_layers   # stacked
+    assert blocks["attn"]["wq"].bits == 8
+    assert blocks["mlp"]["wu"].bits == 4
+    # unquantized params restore densely
+    assert not isinstance(blocks["attn"]["norm"], QTensor)
+    np.testing.assert_array_equal(np.asarray(loaded["embed"]),
+                                  np.asarray(cp["embed"]))
+    assert set(qts) == set(report.artifacts)
+
+    # materialize=True is the legacy dense escape hatch, bit-exact
+    dense, _, _ = load_packed_checkpoint(path, target, materialize=True)
+    for a, b in zip(jax.tree.leaves(dense), jax.tree.leaves(cp)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_packed_serving_logits_parity(tmp_path):
+    """Acceptance: prefill + decode_step on the QTensor-leaf tree match the
+    dense-dequant reference — on the reference impl AND the interpret-mode
+    Pallas kernel (decode-shaped tiles)."""
+    from repro.checkpoint import load_packed_checkpoint
+    cfg, model, params, batches, cp, report, path = _compress_and_save(tmp_path)
+    loaded, _, _ = load_packed_checkpoint(path, params)
+    toks = batches[0]["tokens"][:, :16]
+    b = toks.shape[0]
+
+    def run(p):
+        cache = model.init_cache(b, 20, jnp.float32)
+        logits, cache = jax.jit(model.prefill)(p, {"tokens": toks}, cache)
+        tok = jnp.argmax(logits[:, -1], -1)[:, None]
+        dec, _ = jax.jit(model.decode_step)(p, tok, cache)
+        return logits, dec
+
+    ref_pre, ref_dec = run(cp)
+    pre, dec = run(loaded)
+    np.testing.assert_allclose(np.asarray(pre), np.asarray(ref_pre),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(ref_dec),
+                               rtol=1e-5, atol=1e-5)
+    with matmul_impl("kernel"):
+        pre_k, dec_k = run(loaded)
+    np.testing.assert_allclose(np.asarray(pre_k), np.asarray(ref_pre),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(dec_k), np.asarray(ref_dec),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_partial_and_masked_leaves_fall_back_dense(tmp_path):
+    """Leaves with an unquantized block (blocks.0.* dense) or sparsity masks
+    cannot stay packed — they materialize to the legacy dense weight."""
+    from repro.checkpoint import load_packed_checkpoint
+    pol = Policy({"blocks.0.*": None,
+                  "*.attn.*": QuantSpec(bits=4, group_size=32),
+                  "*.mlp.*": JointSpec(method="awp_joint", ratio=0.5,
+                                       bits=4, group_size=32)})
+    cfg, model, params, batches, cp, report, path = _compress_and_save(
+        tmp_path, policy=pol)
+    loaded, qts, _ = load_packed_checkpoint(path, params)
+    assert not isinstance(loaded["blocks"]["attn"]["wq"], QTensor)  # partial
+    assert not isinstance(loaded["blocks"]["mlp"]["wu"], QTensor)   # masked
+    for a, b in zip(jax.tree.leaves(loaded), jax.tree.leaves(cp)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_moe_packed_serving_parity(tmp_path):
+    """Per-expert QTensors stack into (L, E, …) leaves and the masked-dense
+    MoE path reads them packed."""
+    from repro.checkpoint import load_packed_checkpoint
+    cfg, model, params, batches, cp, report, path = _compress_and_save(
+        tmp_path, arch="qwen3-moe-235b-a22b",
+        policy=Policy({"*": QuantSpec(bits=4, group_size=16)}))
+    loaded, _, _ = load_packed_checkpoint(path, params)
+    wu = loaded["blocks"]["moe"]["wu"]
+    assert isinstance(wu, QTensor)
+    assert wu.packed.shape[:2] == (cfg.num_layers, cfg.num_experts)
+    toks = batches[0]["tokens"][:, :8]
+    b = toks.shape[0]
+    cache = model.init_cache(b, 10, jnp.float32)
+    ref, _ = jax.jit(model.prefill)(cp, {"tokens": toks},
+                                    model.init_cache(b, 10, jnp.float32))
+    out, cache = jax.jit(model.prefill)(loaded, {"tokens": toks}, cache)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    tok = jnp.argmax(out[:, -1], -1)[:, None]
+    dec, _ = jax.jit(model.decode_step)(loaded, tok, cache)
+    assert dec.shape == (b, 1, cfg.padded_vocab)
+
+
+def test_serve_step_fns_fold_argmax(tmp_path):
+    """The jitted serving steps return (B, 1) int32 tokens — greedy
+    selection runs on device, matching host-side argmax of the logits."""
+    from repro.launch.serve import make_step_fns, packed_weight_bytes
+    from repro.checkpoint import load_packed_checkpoint
+    cfg, model, params, batches, cp, report, path = _compress_and_save(tmp_path)
+    loaded, _, _ = load_packed_checkpoint(path, params)
+    prefill, decode = make_step_fns(model)
+    toks = batches[0]["tokens"][:, :12]
+    b = toks.shape[0]
+    cache = model.init_cache(b, 16, jnp.float32)
+    tok, cache2 = prefill(loaded, {"tokens": toks}, cache)
+    assert tok.shape == (b, 1) and tok.dtype == jnp.int32
+    ref_logits, ref_cache = jax.jit(model.prefill)(
+        loaded, {"tokens": toks}, model.init_cache(b, 16, jnp.float32))
+    np.testing.assert_array_equal(
+        np.asarray(tok), np.asarray(jnp.argmax(ref_logits[:, -1], -1)[:, None]))
+    tok2, _ = decode(loaded, tok, cache2)
+    ref_dec, _ = jax.jit(model.decode_step)(loaded, tok, ref_cache)
+    np.testing.assert_array_equal(
+        np.asarray(tok2), np.asarray(jnp.argmax(ref_dec[:, -1], -1)[:, None]))
+    packed_b, dense_b = packed_weight_bytes(loaded)
+    assert 0 < packed_b < dense_b

@@ -1,0 +1,151 @@
+"""Continuous-batching engine load test: dense-KV vs INT8-KV slot cache.
+
+Generates a Zipf-length request trace (many short prompts/outputs, a heavy
+tail — the open-ended-serving regime), drives the engine at equal slot
+counts with the dense (bf16) and the INT8 per-head-group quantized KV
+cache, and reports throughput, p50/p99 request latency, time-to-first-token,
+slot utilization, resident cache bytes, and compiled-program counts (flat
+across the post-warmup trace ⇔ no recompilation).
+
+    PYTHONPATH=src python -m benchmarks.engine_bench [--tiny]
+
+Emits ``results/BENCH_engine.json`` via the shared emitter (CI uploads it
+next to the other BENCH artifacts). A greedy parity check against the
+static serving path runs on the first few requests of the dense trace —
+the engine must be bit-identical per request.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit_json
+from repro.configs import get_tiny_config
+from repro.launch.serve import (build_trace, make_step_fns,
+                                static_greedy_reference)
+from repro.models import build_model
+from repro.serving import Engine, EngineConfig
+
+
+def run_engine(model, params, cfg, ecfg: EngineConfig, reqs):
+    """One warmed engine pass over the trace → metrics dict."""
+    engine = Engine(model, params, ecfg)
+    compiled_warm = engine.warmup(reqs)
+
+    t0 = time.perf_counter()
+    for r in reqs:
+        engine.submit(r)
+    results = engine.run()
+    wall = time.perf_counter() - t0
+
+    lats = sorted(r.latency for r in results)
+    ttfts = sorted(r.ttft for r in results)
+    n_tok = sum(len(r.tokens) for r in results)
+    compiled = dict(engine.compile_counts())
+    counts_known = all(v is not None for v in compiled.values())
+    return {
+        "requests": len(results),
+        "generated_tokens": n_tok,
+        "wall_s": wall,
+        "tok_per_s": n_tok / wall,
+        "latency_p50_ms": 1e3 * lats[len(lats) // 2],
+        "latency_p99_ms": 1e3 * lats[min(len(lats) - 1,
+                                         int(len(lats) * 0.99))],
+        "ttft_p50_ms": 1e3 * ttfts[len(ttfts) // 2],
+        "slot_utilization": engine.utilization(),
+        "kv_cache_bytes": engine.kv_cache_bytes(),
+        "compiled_programs": compiled,
+        # None = jit cache sizes unavailable (UNKNOWN, not "no recompile")
+        "recompiled_after_warmup": (compiled != compiled_warm
+                                    if counts_known else None),
+    }, results
+
+
+def check_parity(model, params, reqs, results, max_len, n_check: int,
+                 step_fns=None):
+    """Greedy engine outputs vs the static path, bit-identical per request.
+    ``step_fns`` is hoisted by the caller so the static decode program
+    compiles once, not per checked request."""
+    by_rid = {r.rid: r.tokens for r in results}
+    for req in reqs[:n_check]:
+        ref = static_greedy_reference(model, params, req, max_len, step_fns)
+        assert by_rid[req.rid] == ref, \
+            f"engine/static divergence rid={req.rid}: {by_rid[req.rid]} != {ref}"
+    return n_check
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama32-1b")
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=48)
+    ap.add_argument("--max-prompt", type=int, default=48)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--parity-check", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI sizes: 4 slots, 16 requests, short lengths")
+    args = ap.parse_args()
+    if args.tiny:
+        args.slots, args.requests = 4, 16
+        args.max_prompt, args.max_new, args.parity_check = 24, 12, 4
+
+    cfg = get_tiny_config(args.arch)
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    max_len = args.max_prompt + args.max_new
+    reqs = build_trace(cfg, num_requests=args.requests,
+                       max_prompt=args.max_prompt, max_new=args.max_new,
+                       seed=args.seed)
+    mean_p = float(np.mean([r.prompt_len for r in reqs]))
+    mean_n = float(np.mean([r.max_new_tokens for r in reqs]))
+    print(f"engine bench: {args.arch} tiny, slots={args.slots} "
+          f"requests={args.requests} max_len={max_len} "
+          f"(mean prompt {mean_p:.1f}, mean new {mean_n:.1f})")
+
+    rows = {}
+    for name, quant in (("dense", False), ("int8", True)):
+        ecfg = EngineConfig(num_slots=args.slots, max_len=max_len,
+                            kv_dtype=jnp.bfloat16, kv_quantized=quant)
+        rows[name], results = run_engine(model, params, cfg, ecfg, reqs)
+        if name == "dense" and args.parity_check:
+            # bf16 cache rounds K/V — rerun the parity slice on an f32 cache
+            ecfg32 = EngineConfig(num_slots=args.slots, max_len=max_len,
+                                  kv_dtype=jnp.float32)
+            _, res32 = run_engine(model, params, cfg, ecfg32, reqs)
+            n = check_parity(model, params, reqs, res32, max_len,
+                             args.parity_check,
+                             step_fns=make_step_fns(model))
+            print(f"  parity: {n}/{n} requests bit-identical to the "
+                  f"static path (f32 KV)")
+        r = rows[name]
+        print(f"  {name:5s} {r['tok_per_s']:8.0f} tok/s   "
+              f"p50 {r['latency_p50_ms']:7.1f}ms   "
+              f"p99 {r['latency_p99_ms']:7.1f}ms   "
+              f"util {r['slot_utilization']:.2f}   "
+              f"kv {r['kv_cache_bytes'] / 1e6:6.2f}MB   "
+              f"recompiled={r['recompiled_after_warmup']}")
+
+    ratio = rows["dense"]["kv_cache_bytes"] / max(rows["int8"]["kv_cache_bytes"], 1)
+    assert rows["int8"]["kv_cache_bytes"] < rows["dense"]["kv_cache_bytes"], \
+        "INT8 cache must be smaller than dense"
+    assert rows["dense"]["recompiled_after_warmup"] is not True
+    assert rows["int8"]["recompiled_after_warmup"] is not True
+    print(f"  int8 kv cache = {1 / ratio:.2f}x dense bytes "
+          f"({ratio:.2f}x smaller)")
+
+    out = emit_json("engine", {
+        "arch": args.arch,
+        "slots": args.slots, "requests": args.requests,
+        "max_len": max_len,
+        "mean_prompt_len": mean_p, "mean_new_tokens": mean_n,
+        "dense": rows["dense"], "int8": rows["int8"],
+        "kv_compression_x": ratio,
+    })
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,6 +15,7 @@ from repro.kernels import awp_pgd as _awp_pgd
 from repro.kernels import topk_mask as _topk
 from repro.kernels import quant_proj as _quant
 from repro.kernels import dequant_matmul as _dq
+from repro.kernels import kv_dequant as _kv
 from repro.kernels import ref
 
 
@@ -54,6 +55,16 @@ def dequant_matmul(x, packed, scale, zero, group_size: int = 128,
                               interpret=_interpret())
 
 
+@functools.partial(jax.jit, static_argnames=("group_size", "use_pallas"))
+def kv_dequant(codes, scale, zero, group_size: int, use_pallas: bool = True):
+    """INT8 KV-cache expansion: codes (R, K) uint8 + per-group scale/zero →
+    (R, K) f32 (the attention-read side of the quantized slot cache)."""
+    if not use_pallas:
+        return ref.kv_dequant(codes, scale, zero, group_size)
+    return _kv.kv_dequant(codes, scale, zero, group_size=group_size,
+                          interpret=_interpret())
+
+
 def awp_prune_fused(w, c, k: int, eta, iters: int, theta0=None,
                     use_pallas: bool = True):
     """Full AWP pruning loop on the kernel path: fused PGD step + bisection
@@ -67,4 +78,4 @@ def awp_prune_fused(w, c, k: int, eta, iters: int, theta0=None,
 
 
 __all__ = ["awp_pgd_step", "topk_row", "quant_project", "dequant_matmul",
-           "awp_prune_fused"]
+           "kv_dequant", "awp_prune_fused"]

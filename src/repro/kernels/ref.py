@@ -35,4 +35,13 @@ def dequant_matmul(x, packed, scale, zero, group_size=128):
     return (x.astype(jnp.float32) @ deq.T).astype(x.dtype)
 
 
-__all__ = ["awp_pgd_step", "topk_row", "quant_project", "dequant_matmul"]
+def kv_dequant(codes, scale, zero, group_size):
+    r, k = codes.shape
+    g = codes.astype(jnp.float32).reshape(r, k // group_size, group_size)
+    deq = (g - zero.astype(jnp.float32)[..., None]) \
+        * scale.astype(jnp.float32)[..., None]
+    return deq.reshape(r, k)
+
+
+__all__ = ["awp_pgd_step", "topk_row", "quant_project", "dequant_matmul",
+           "kv_dequant"]

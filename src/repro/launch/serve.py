@@ -1,16 +1,24 @@
-"""Serving launcher: batched prefill + decode with optional compressed
-weights (what the paper compresses models FOR).
+"""Serving launcher: static batch or continuous-batching engine, with
+optional compressed weights (what the paper compresses models FOR).
+
+Static path (one prefill + fixed-length greedy decode, uniform batch):
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama2-7b --tiny \
       --batch 8 --prompt-len 32 --gen 32 [--ckpt results/compressed_ckpt]
+
+Engine path (slot-based continuous batching over a mixed-length trace,
+per-request sampling, optional INT8 KV cache — see docs/serving.md):
+
+  PYTHONPATH=src python -m repro.launch.serve --tiny --engine continuous \
+      --requests 32 --slots 8 --gen 32 [--kv-quant] [--verify]
 
 With ``--packed`` the checkpoint is a packed QTensor checkpoint (written by
 ``repro.launch.compress --save-packed``): quantized layers stay packed
 ``QTensor`` leaves of the param tree end-to-end — the jitted forward pass
 reads the integer codes through the fused dequant-matmul, no dense floats
 are ever materialized for them (``--materialize`` restores the legacy
-dense expansion). Greedy sampling runs inside the jitted prefill/decode
-steps, so decode transfers one int32 per request per step, not the logits.
+dense expansion). Token selection runs inside the jitted steps on both
+paths, so decode transfers one int32 per request per step, not the logits.
 """
 from __future__ import annotations
 
@@ -37,13 +45,30 @@ def qtensor_leaves(params) -> list:
             if isinstance(l, QTensor)]
 
 
+def dense_itemsize(params) -> int:
+    """Bytes per element of the tree's dense serving dtype: the first
+    floating dense leaf decides (bf16 trees → 2, f32 → 4; QTensor children
+    are skipped — their f32 scales are not the serving dtype). 4 when the
+    tree has no dense float leaf."""
+    for leaf in jax.tree.leaves(params,
+                                is_leaf=lambda x: isinstance(x, QTensor)):
+        if isinstance(leaf, QTensor):
+            continue
+        if hasattr(leaf, "dtype") and jnp.issubdtype(leaf.dtype, jnp.floating):
+            return jnp.dtype(leaf.dtype).itemsize
+    return 4
+
+
 def packed_weight_bytes(params) -> tuple:
-    """(packed_bytes, dense_equiv_bytes) over the QTensor leaves of params."""
+    """(packed_bytes, dense_equiv_bytes) over the QTensor leaves of params.
+    The dense equivalent is counted at the tree's ACTUAL dense dtype (a
+    bf16 serving tree compares against 2-byte floats, not a hardcoded 4)."""
+    itemsize = dense_itemsize(params)
     packed = dense = 0
     for leaf in qtensor_leaves(params):
         packed += leaf.nbytes()
         nibble = leaf.bits == 4 and leaf.packed.shape[-1] * 2 == leaf.shape[1]
-        dense += leaf.packed.size * (2 if nibble else 1) * 4
+        dense += leaf.packed.size * (2 if nibble else 1) * itemsize
     return packed, dense
 
 
@@ -63,25 +88,7 @@ def make_step_fns(model):
             jax.jit(decode_fn, donate_argnums=2))
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llama2-7b")
-    ap.add_argument("--tiny", action="store_true")
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--ckpt", default="")
-    ap.add_argument("--packed", action="store_true",
-                    help="--ckpt is a packed QTensor checkpoint")
-    ap.add_argument("--materialize", action="store_true",
-                    help="with --packed: expand quantized layers to dense "
-                         "floats (legacy path) instead of serving packed")
-    args = ap.parse_args()
-    if args.packed and not args.ckpt:
-        ap.error("--packed requires --ckpt")
-
-    cfg = get_tiny_config(args.arch) if args.tiny else get_config(args.arch)
-    model = build_model(cfg, remat=False)
+def _load_params(args, model):
     params = model.init(jax.random.PRNGKey(0))
     if args.ckpt and args.packed:
         params, qts, manifest = CheckpointManager(
@@ -89,12 +96,14 @@ def main():
                                              materialize=args.materialize)
         if params is None:
             raise SystemExit(f"[serve] no checkpoint under {args.ckpt}")
-        dense = sum(int(np.prod(qt.shape)) * 4 for qt in qts.values())
+        itemsize = dense_itemsize(params)
+        dense = sum(int(np.prod(qt.shape)) * itemsize for qt in qts.values())
         packed_b = sum(qt.nbytes() for qt in qts.values())
         resident, _ = packed_weight_bytes(params)
         print(f"[serve] loaded packed checkpoint step {manifest['step']}: "
               f"{len(qts)} QTensor layers, "
-              f"{dense / 1e6:.1f}MB dense -> {packed_b / 1e6:.1f}MB packed")
+              f"{dense / 1e6:.1f}MB dense ({itemsize}B/elem) -> "
+              f"{packed_b / 1e6:.1f}MB packed")
         note = ""
         if args.materialize:
             note = " (materialized dense — legacy path)"
@@ -108,7 +117,10 @@ def main():
         if restored is not None:
             params = restored["params"]
             print(f"[serve] loaded checkpoint step {step}")
+    return params
 
+
+def _serve_static(args, cfg, model, params):
     gen = ZipfMarkov(DataConfig(vocab_size=cfg.vocab_size,
                                 seq_len=args.prompt_len,
                                 global_batch=args.batch))
@@ -136,6 +148,157 @@ def main():
     print(f"[serve] prefill {args.batch * args.prompt_len / t_prefill:.0f} tok/s, "
           f"decode {args.batch * (args.gen - 1) / max(t_decode, 1e-9):.0f} tok/s")
     print(f"[serve] sample continuation (req 0): {seqs[0][:16].tolist()}")
+
+
+def build_trace(cfg, *, num_requests: int, max_prompt: int, max_new: int,
+                seed: int = 0, temperature: float = 0.0, top_k: int = 0):
+    """Mixed-length request trace off the Zipf-Markov corpus: Zipf-ish
+    prompt/output lengths (many short, a heavy tail), FIFO submit order."""
+    from repro.serving import GenerationRequest, SamplingParams
+    gen = ZipfMarkov(DataConfig(vocab_size=cfg.vocab_size, seq_len=max_prompt,
+                                global_batch=1, seed=seed))
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(num_requests):
+        plen = int(np.clip(rng.zipf(1.6), 1, max_prompt))
+        nnew = int(np.clip(rng.zipf(1.4), 1, max_new))
+        toks, _ = gen.batch(i)
+        reqs.append(GenerationRequest(
+            rid=i, prompt=toks[0, :plen].astype(np.int32),
+            max_new_tokens=nnew,
+            sampling=SamplingParams(temperature=temperature, top_k=top_k,
+                                    seed=seed + i)))
+    return reqs
+
+
+def static_greedy_reference(model, params, req, max_len,
+                            step_fns=None) -> list:
+    """One request on the STATIC path: batch=1, exact prompt, greedy decode,
+    same cache length as the engine's slots — the per-request bit-parity
+    oracle shared by ``--verify``, engine_bench, and the engine tests."""
+    prefill, decode = step_fns or make_step_fns(model)
+    cache = model.init_cache(1, max_len, jnp.float32)
+    tok, cache = prefill(params, {"tokens": jnp.asarray(req.prompt[None, :])},
+                         cache)
+    out = [int(tok[0, 0])]
+    for _ in range(req.max_new_tokens - 1):
+        tok, cache = decode(params, tok, cache)
+        out.append(int(tok[0, 0]))
+    return out
+
+
+def _verify_against_static(model, params, reqs, results, max_len) -> int:
+    """Greedy engine outputs must be bit-identical to the static path run
+    per request (same cache length). Returns the mismatch count."""
+    step_fns = make_step_fns(model)
+    by_rid = {r.rid: r.tokens for r in results}
+    bad = 0
+    for req in reqs:
+        ref = static_greedy_reference(model, params, req, max_len, step_fns)
+        if by_rid[req.rid] != ref:
+            bad += 1
+            print(f"[serve]   MISMATCH rid={req.rid}: {by_rid[req.rid]} != {ref}")
+    return bad
+
+
+def _serve_engine(args, cfg, model, params):
+    from repro.serving import Engine, EngineConfig
+
+    max_len = min(args.max_len, args.prompt_len + args.gen) \
+        if args.max_len else args.prompt_len + args.gen
+    if max_len <= args.gen:
+        raise SystemExit(f"[serve] --max-len {max_len} leaves no room for "
+                         f"prompts at --gen {args.gen}")
+    ecfg = EngineConfig(num_slots=args.slots, max_len=max_len,
+                        kv_quantized=args.kv_quant,
+                        kv_dtype=jnp.float32)
+    engine = Engine(model, params, ecfg)
+    reqs = build_trace(cfg, num_requests=args.requests,
+                       max_prompt=min(args.prompt_len, max_len - args.gen),
+                       max_new=args.gen, seed=args.seed,
+                       temperature=args.temperature, top_k=args.top_k)
+    compiled = engine.warmup(reqs)
+
+    t0 = time.time()
+    for r in reqs:
+        engine.submit(r)
+    results = engine.run()
+    wall = time.time() - t0
+    after = engine.compile_counts()
+
+    n_tok = sum(len(r.tokens) for r in results)
+    lats = sorted(r.latency for r in results)
+    p50 = lats[len(lats) // 2]
+    p99 = lats[min(len(lats) - 1, int(len(lats) * 0.99))]
+    print(f"[serve] engine: {len(results)} requests, {n_tok} tokens in "
+          f"{wall:.2f}s -> {n_tok / wall:.0f} tok/s")
+    print(f"[serve] latency p50 {p50 * 1e3:.1f}ms p99 {p99 * 1e3:.1f}ms, "
+          f"slot utilization {engine.utilization():.2f}")
+    print(f"[serve] kv cache resident "
+          f"{engine.kv_cache_bytes() / 1e6:.2f}MB "
+          f"({'int8' if args.kv_quant else 'dense'}), compiled programs "
+          f"{after} (warmup {compiled})")
+    if None in after.values() or None in compiled.values():
+        print("[serve] note: jit cache sizes unavailable on this jax — "
+              "recompilation check is UNKNOWN")
+    elif after != compiled:
+        print("[serve] WARNING: recompilation after warmup")
+    if args.verify:
+        if args.temperature > 0:
+            print("[serve] --verify needs greedy (temperature 0); skipping")
+        elif args.kv_quant:
+            print("[serve] --verify compares dense-KV greedy; skipping "
+                  "under --kv-quant")
+        else:
+            bad = _verify_against_static(model, params, reqs, results, max_len)
+            print(f"[serve] verify vs static path: "
+                  f"{len(reqs) - bad}/{len(reqs)} bit-identical")
+            if bad:
+                raise SystemExit(1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama2-7b")
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--packed", action="store_true",
+                    help="--ckpt is a packed QTensor checkpoint")
+    ap.add_argument("--materialize", action="store_true",
+                    help="with --packed: expand quantized layers to dense "
+                         "floats (legacy path) instead of serving packed")
+    ap.add_argument("--engine", choices=("static", "continuous"),
+                    default="static",
+                    help="static: uniform batch, one prefill + N decodes; "
+                         "continuous: slot-based continuous batching")
+    ap.add_argument("--slots", type=int, default=8,
+                    help="engine: device slots (concurrent requests)")
+    ap.add_argument("--requests", type=int, default=32,
+                    help="engine: trace length (mixed-length requests)")
+    ap.add_argument("--max-len", type=int, default=0,
+                    help="engine: slot KV length (0 -> prompt+gen)")
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="engine: INT8 per-head-group KV cache")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--verify", action="store_true",
+                    help="engine: assert greedy outputs are bit-identical "
+                         "to the static path per request")
+    args = ap.parse_args()
+    if args.packed and not args.ckpt:
+        ap.error("--packed requires --ckpt")
+
+    cfg = get_tiny_config(args.arch) if args.tiny else get_config(args.arch)
+    model = build_model(cfg, remat=False)
+    params = _load_params(args, model)
+    if args.engine == "continuous":
+        _serve_engine(args, cfg, model, params)
+    else:
+        _serve_static(args, cfg, model, params)
 
 
 if __name__ == "__main__":

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.quant import QTensor
+from repro.serving.kv_cache import QuantizedKV, kv_dequantize, kv_update
 from repro.sharding import ShardingRules, NO_RULES, hint
 
 
@@ -274,9 +275,12 @@ def attn_apply(p, x, cfg, rules: ShardingRules = NO_RULES, *,
 
     Returns (out, new_kv): new_kv is (k, v) of this call when kv_cache is
     None (training / prefill cache fill) or the updated (k_cache, v_cache)
-    for decode. ``cache_pos`` is the scalar write position (uniform across
-    the batch — the serving convention; per-request offsets live in the
-    request manager, not the inner step).
+    for decode. ``cache_pos`` is the write position: a scalar (uniform
+    across the batch — the static serving path) or a per-row (B,) vector
+    (the continuous-batching engine, where each slot decodes at its own
+    position; requires s == 1). Cache entries may be dense arrays or
+    INT8 :class:`~repro.serving.kv_cache.QuantizedKV` storage — quantized
+    caches quantize on write and dequantize on the attention read.
     """
     b, s, d = x.shape
     hd = cfg.resolved_head_dim
@@ -300,10 +304,21 @@ def attn_apply(p, x, cfg, rules: ShardingRules = NO_RULES, *,
         new_kv = (k, v)
     else:
         k_cache, v_cache = kv_cache                  # (B, Smax, Hk, D)
-        k_cache = jax.lax.dynamic_update_slice_in_dim(
-            k_cache, k.astype(k_cache.dtype), cache_pos, axis=1)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(
-            v_cache, v.astype(v_cache.dtype), cache_pos, axis=1)
+        if isinstance(k_cache, QuantizedKV):
+            k_cache = kv_update(k_cache, k, cache_pos)
+            v_cache = kv_update(v_cache, v, cache_pos)
+        elif getattr(cache_pos, "ndim", 0) == 1:     # per-slot positions
+            assert s == 1, "per-slot cache writes are one token per step"
+            rows = jnp.arange(b)
+            k_cache = k_cache.at[rows, cache_pos].set(
+                k[:, 0].astype(k_cache.dtype))
+            v_cache = v_cache.at[rows, cache_pos].set(
+                v[:, 0].astype(v_cache.dtype))
+        else:
+            k_cache = jax.lax.dynamic_update_slice_in_dim(
+                k_cache, k.astype(k_cache.dtype), cache_pos, axis=1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(
+                v_cache, v.astype(v_cache.dtype), cache_pos, axis=1)
         if s > 1:
             # prefill/chunked-prefill: flash attention over the new tokens
             # (assumes cache_pos == 0 — the serving manager's convention);
@@ -311,7 +326,12 @@ def attn_apply(p, x, cfg, rules: ShardingRules = NO_RULES, *,
             out = flash_attention(q, k, v, causal=True, q_chunk=attn_chunk,
                                   kv_chunk=attn_chunk, p_dtype=attn_p_dtype)
         else:
-            out = decode_attention(q, k_cache, v_cache, positions, rules,
+            if isinstance(k_cache, QuantizedKV):
+                k_r = kv_dequantize(k_cache, q.dtype)
+                v_r = kv_dequantize(v_cache, q.dtype)
+            else:
+                k_r, v_r = k_cache, v_cache
+            out = decode_attention(q, k_r, v_r, positions, rules,
                                    p_dtype=attn_p_dtype)
         new_kv = (k_cache, v_cache)
 

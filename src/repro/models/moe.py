@@ -73,14 +73,22 @@ def _gates(xn: jax.Array, router_w: jax.Array, k: int):
     return top_p, top_i
 
 
+def _expert_mm(w, xe: jax.Array) -> jax.Array:
+    """(E, C, d_in) @ per-expert weight → (E, C, d_out): dense einsum or the
+    stacked-QTensor dequant-matmul (packed experts on the a2a path)."""
+    if isinstance(w, QTensor):
+        return L.expert_apply(w, xe, per_expert=True)
+    return jnp.einsum("ecd,edf->ecf", xe, w)
+
+
 def _expert_ffn(xe: jax.Array, wg, wu, wd, act: str) -> jax.Array:
     """xe: (E, C, d) per-expert token buffers, expert-batched matmuls."""
-    up = jnp.einsum("ecd,edf->ecf", xe, wu)
+    up = _expert_mm(wu, xe)
     if wg is not None:
-        up = L.mlp_act(jnp.einsum("ecd,edf->ecf", xe, wg), "silu") * up
+        up = L.mlp_act(_expert_mm(wg, xe), "silu") * up
     else:
         up = L.mlp_act(up, act)
-    return jnp.einsum("ecf,efd->ecd", up, wd)
+    return _expert_mm(wd, up)
 
 
 def _slot_factor(cfg: ModelConfig, n_shards: int) -> int:
@@ -103,6 +111,9 @@ def _slot_weights(p, cfg: ModelConfig, r: int, rules: ShardingRules):
     wu, wd, wg = p["wu"], p["wd"], p.get("wg")
     if r == 1:
         return wg, wu, wd
+    assert not any(isinstance(w, QTensor) for w in (wu, wd, wg)), \
+        "EP×TP slot re-layout (r>1) reshapes raw weights; packed experts " \
+        "take the masked-dense path (moe_apply guards this)"
     e, d, f = wu.shape
     fr = f // r
     def split_up(w):
@@ -223,10 +234,20 @@ def moe_apply_a2a(p, x, cfg: ModelConfig, rules: ShardingRules) -> jax.Array:
         return y.reshape(b_loc, s_loc, d)
 
     x_spec = P(dp, tp, None)
-    ew_spec = P(tp, None, None)
+
+    def ew_spec(w):
+        """Expert-weight spec: experts sharded over the tp axis. Stacked
+        QTensor leaves shard per child (every child leads with E; col_scale
+        may be absent/lower-rank, hence per-leaf ranks)."""
+        if isinstance(w, QTensor):
+            return jax.tree.map(
+                lambda a: P(tp, *([None] * (a.ndim - 1))), w)
+        return P(tp, None, None)
+
     y = compat.shard_map(local, mesh=mesh,
-                      in_specs=(x_spec, P(None, None), ew_spec, ew_spec,
-                                ew_spec if has_gate else P()),
+                      in_specs=(x_spec, P(None, None), ew_spec(wu_w),
+                                ew_spec(wd_w),
+                                ew_spec(wg_w) if has_gate else P()),
                       out_specs=x_spec,
                       check_vma=False)(
         xn, p["router"], wu_w, wd_w,
@@ -237,17 +258,21 @@ def moe_apply_a2a(p, x, cfg: ModelConfig, rules: ShardingRules) -> jax.Array:
 def moe_apply(p, x, cfg: ModelConfig, rules: ShardingRules = NO_RULES, *,
               capture: Optional[dict] = None, prefer_a2a: bool = True) -> jax.Array:
     """Auto-select the execution path (DESIGN.md §4). Packed QTensor expert
-    weights (any of wu/wd/wg) always take the masked-dense path — the a2a
-    slot re-layout reshapes raw weight arrays, which packed codes don't
-    support."""
+    weights (any of wu/wd/wg) ride the a2a path whenever the expert count
+    tiles the TP axis directly (slot factor r == 1 — the stacked
+    dequant-matmul shards per expert like a dense stack); only the EP×TP
+    slot re-layout (r > 1), which reshapes raw weight arrays, forces
+    masked-dense for packed experts."""
     packed = any(isinstance(p.get(k), QTensor) for k in ("wu", "wd", "wg"))
-    if rules.mesh is None or capture is not None or not prefer_a2a or packed:
+    if rules.mesh is None or capture is not None or not prefer_a2a:
         return moe_apply_dense(p, x, cfg, rules, capture=capture)
     b, s, _ = x.shape
     tp = rules.axis_size(rules.tp_axis or ())
     dp = rules.axis_size(rules.batch_axes)
     e = cfg.num_experts
     tileable = (e % tp == 0) or (tp % e == 0 and cfg.d_ff % (tp // e) == 0)
+    if packed:
+        tileable = e % tp == 0          # packed codes can't slot-split (r>1)
     ok = (tp > 1 and tileable and b % dp == 0
           and s % tp == 0 and (b // dp) * (s // tp) >= 64)
     if ok:
@@ -343,13 +368,13 @@ class MoEModel(T.DenseModel):
                                             attn_p_dtype=self.attn_p_dtype)
             return y, (kc2, vc2)
         if self.unroll:
-            ks, vs = [], []
+            kvs = []
             for i in range(cfg.num_layers):
-                h, (kc2, vc2) = body(
-                    h, (self.block_slice(params, i), cache["k"][i], cache["v"][i]))
-                ks.append(kc2)
-                vs.append(vc2)
-            k_new, v_new = jnp.stack(ks), jnp.stack(vs)
+                layer_kv = jax.tree.map(lambda x: x[i],
+                                        (cache["k"], cache["v"]))
+                h, kv2 = body(h, (self.block_slice(params, i),) + layer_kv)
+                kvs.append(kv2)
+            k_new, v_new = jax.tree.map(lambda *xs: jnp.stack(xs), *kvs)
         else:
             h, (k_new, v_new) = jax.lax.scan(
                 body, h, (params["blocks"], cache["k"], cache["v"]))

@@ -193,13 +193,13 @@ class DenseModel:
                                         attn_p_dtype=self.attn_p_dtype)
             return y, (kc2, vc2)
         if self.unroll:
-            ks, vs = [], []
+            kvs = []
             for i in range(cfg.num_layers):
-                h, (kc2, vc2) = body(
-                    h, (self.block_slice(params, i), cache["k"][i], cache["v"][i]))
-                ks.append(kc2)
-                vs.append(vc2)
-            k_new, v_new = jnp.stack(ks), jnp.stack(vs)
+                layer_kv = jax.tree.map(lambda x: x[i],
+                                        (cache["k"], cache["v"]))
+                h, kv2 = body(h, (self.block_slice(params, i),) + layer_kv)
+                kvs.append(kv2)
+            k_new, v_new = jax.tree.map(lambda *xs: jnp.stack(xs), *kvs)
         else:
             h, (k_new, v_new) = jax.lax.scan(
                 body, h, (params["blocks"], cache["k"], cache["v"]))
@@ -207,20 +207,51 @@ class DenseModel:
                      "pos": cache["pos"] + positions.shape[1]}
         return h, new_cache
 
+    @staticmethod
+    def _base_positions(pos: jax.Array) -> jax.Array:
+        """Cache position as a broadcastable base: scalar (static path) or
+        per-slot vector (the engine's slot cache) → (B|1, 1)."""
+        return pos[:, None] if getattr(pos, "ndim", 0) == 1 else pos
+
     def prefill(self, params, batch, cache):
         """Teacher-forced pass that fills the cache; returns last logits."""
         h = self.embed(params, batch)
         b, s = h.shape[0], h.shape[1]
-        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s)) + cache["pos"]
+        positions = (jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+                     + self._base_positions(cache["pos"]))
         h, cache = self._cached_scan(params, h, cache, positions)
         h_last = L.rmsnorm(h[:, -1:, :], params["final_norm"], self.cfg.norm_eps)
         return self._mask_pad(L.linear_apply(self._head_w(params), h_last)), cache
 
+    def prefill_at(self, params, batch, cache, lengths):
+        """Prefill right-padded prompts: per-row true ``lengths`` (B,).
+
+        Same cache fill as :meth:`prefill` (cache rows past a row's length
+        hold padding K/V — never attended, the causal mask stops at each
+        query's position and decode overwrites them in order), but logits
+        are gathered at each row's LAST REAL token (lengths-1) instead of
+        the padded tail. The engine's bucketed prefill step drives this.
+        """
+        h = self.embed(params, batch)
+        b, s = h.shape[0], h.shape[1]
+        positions = (jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+                     + self._base_positions(cache["pos"]))
+        h, cache = self._cached_scan(params, h, cache, positions)
+        idx = jnp.clip(lengths - 1, 0, s - 1)
+        h_last = jnp.take_along_axis(h, idx[:, None, None], axis=1)  # (B,1,d)
+        h_last = L.rmsnorm(h_last, params["final_norm"], self.cfg.norm_eps)
+        return self._mask_pad(L.linear_apply(self._head_w(params), h_last)), cache
+
     def decode_step(self, params, tokens, cache):
-        """One decode step. tokens: (B, 1) int32."""
+        """One decode step. tokens: (B, 1) int32. ``cache["pos"]`` is a
+        scalar (uniform batch) or a per-slot (B,) vector (engine path)."""
         h = jnp.take(params["embed"], tokens, axis=0)
         b = h.shape[0]
-        positions = jnp.broadcast_to(cache["pos"][None, None], (b, 1))
+        pos = cache["pos"]
+        if getattr(pos, "ndim", 0) == 1:
+            positions = pos[:, None]                       # (B, 1) per-slot
+        else:
+            positions = jnp.broadcast_to(pos[None, None], (b, 1))
         h, cache = self._cached_scan(params, h, cache, positions)
         h = L.rmsnorm(h, params["final_norm"], self.cfg.norm_eps)
         return self._mask_pad(L.linear_apply(self._head_w(params), h)), cache

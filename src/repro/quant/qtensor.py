@@ -68,10 +68,16 @@ def matmul_impl(mode: str):
         set_matmul_impl(prev)
 
 
-def _resolved_impl() -> str:
+def resolved_impl() -> str:
+    """The implementation the current mode resolves to ("kernel" or
+    "reference") — shared by the weight matmuls here and the serving KV
+    cache's dequant (``repro.serving.kv_cache``)."""
     if _MATMUL_IMPL != "auto":
         return _MATMUL_IMPL
     return "kernel" if jax.default_backend() == "tpu" else "reference"
+
+
+_resolved_impl = resolved_impl
 
 
 def pack_int4(q: jax.Array) -> jax.Array:
@@ -220,5 +226,5 @@ jax.tree_util.register_pytree_with_keys(QTensor, _qt_flatten_with_keys,
                                         _qt_unflatten, _qt_flatten)
 
 
-__all__ = ["QTensor", "matmul_impl", "pack_int4", "set_matmul_impl",
-           "unpack_int4"]
+__all__ = ["QTensor", "matmul_impl", "pack_int4", "resolved_impl",
+           "set_matmul_impl", "unpack_int4"]

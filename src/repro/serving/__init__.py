@@ -1,0 +1,30 @@
+"""Serving runtime: continuous-batching engine over a slot-indexed,
+optionally INT8-quantized KV cache, with per-request sampling.
+
+`kv_cache` / `sampling` / `scheduler` are model-free and import eagerly
+(``models/layers.py`` depends on `kv_cache` for the quantized-cache hook);
+the `Engine` itself imports the model stack, so it loads lazily — keeping
+`repro.serving.kv_cache` importable from inside `repro.models` without a
+cycle.
+"""
+from repro.serving.kv_cache import (KVCacheConfig, QuantizedKV, cache_bytes,
+                                    init_slot_cache, kv_dequantize,
+                                    kv_quantize, kv_update, write_slot)
+from repro.serving.sampling import SamplingParams, sample_tokens
+from repro.serving.scheduler import (GenerationRequest, GenerationResult,
+                                     Scheduler)
+
+_LAZY = ("Engine", "EngineConfig")
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        from repro.serving import engine
+        return getattr(engine, name)
+    raise AttributeError(name)
+
+
+__all__ = ["Engine", "EngineConfig", "GenerationRequest", "GenerationResult",
+           "KVCacheConfig", "QuantizedKV", "SamplingParams", "Scheduler",
+           "cache_bytes", "init_slot_cache", "kv_dequantize", "kv_quantize",
+           "kv_update", "sample_tokens", "write_slot"]

@@ -1,0 +1,251 @@
+"""Continuous-batching serving engine: variable-length requests in fixed
+device slots, no recompilation after warmup.
+
+The engine owns a slot-indexed KV cache (``serving/kv_cache.py``; S slots ×
+max_len tokens, dense or INT8 per-head-group quantized) and two jitted step
+functions:
+
+- **prefill** (one compile per prompt bucket): runs the model over one
+  request's right-padded prompt against a fresh (L, 1, W) mini-cache,
+  gathers logits at the true last token, samples the first output token on
+  device, and splices the mini-cache into the admitted slot's rows
+  (quantizing if the cache is INT8);
+- **decode** (one compile, ever): one token for ALL slots at once — each
+  slot reads/writes the cache at its own position (``pos`` is a vector),
+  per-slot sampling params ride along as arrays, and exactly one int32 per
+  slot crosses the device boundary per step.
+
+The host-side :class:`~repro.serving.scheduler.Scheduler` feeds it: FIFO
+admission onto the slot free-list, prompt-length bucketing (the only shape
+degree of freedom), retire-on-completion. Retired slots keep decoding
+garbage at position 0 until reused — their writes land below the next
+request's prefill splice and are never attended.
+
+`launch/serve.py --engine continuous` drives it; `benchmarks/engine_bench.py`
+load-tests it (Zipf lengths) into ``results/BENCH_engine.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.kv_cache import (KVCacheConfig, cache_bytes,
+                                    init_slot_cache, write_slot)
+from repro.serving.sampling import sample_tokens
+from repro.serving.scheduler import (GenerationRequest, GenerationResult,
+                                     Scheduler)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Engine shape/storage policy. ``kv_quantized`` switches the slot
+    cache to INT8 per-head-group storage (``kv_group_size=0`` → one group
+    per head); ``prompt_buckets=()`` → power-of-two buckets."""
+    num_slots: int = 8
+    max_len: int = 256
+    prompt_buckets: tuple = ()
+    kv_dtype: Any = jnp.float32
+    kv_quantized: bool = False
+    kv_group_size: int = 0
+    max_top_k: int = 64
+
+
+class Engine:
+    """Slot-based continuous batching over a fixed-shape decode program."""
+
+    def __init__(self, model, params, cfg: EngineConfig = EngineConfig()):
+        mcfg = model.cfg
+        if mcfg.family not in ("dense", "moe") or mcfg.frontend:
+            raise ValueError(
+                f"engine serves token-LM families (dense/moe), got "
+                f"{mcfg.family}/{mcfg.frontend}")
+        self.model, self.params, self.cfg = model, params, cfg
+        self.scheduler = Scheduler(cfg.num_slots, cfg.max_len,
+                                   cfg.prompt_buckets)
+        kv_cfg = KVCacheConfig(num_slots=cfg.num_slots, max_len=cfg.max_len,
+                               dtype=cfg.kv_dtype, quantized=cfg.kv_quantized,
+                               group_size=cfg.kv_group_size)
+        cache = init_slot_cache(mcfg, kv_cfg)
+        self.kv = {"k": cache["k"], "v": cache["v"]}   # pos lives host-side
+        s = cfg.num_slots
+        self._pos = np.zeros(s, np.int32)
+        self._tok = np.zeros(s, np.int32)
+        self._temps = np.zeros(s, np.float32)
+        self._topks = np.zeros(s, np.int32)
+        self._seeds = np.zeros(s, np.uint32)
+        self._steps = np.zeros(s, np.uint32)
+        self._results: Dict[int, GenerationResult] = {}
+        self._done: List[GenerationResult] = []
+        self.decode_steps = 0
+        self.active_slot_steps = 0
+        self._prefill, self._decode = self._make_step_fns()
+
+    # -- jitted steps ------------------------------------------------------
+    def _make_step_fns(self):
+        model, cfg = self.model, self.cfg
+        mcfg = model.cfg
+        mini_dtype = jnp.float32 if cfg.kv_quantized else cfg.kv_dtype
+
+        def prefill_fn(params, kv, tokens, length, slot, temp, topk, seed):
+            w = tokens.shape[1]
+            zeros = jnp.zeros((mcfg.num_layers, 1, w, mcfg.num_kv_heads,
+                               mcfg.resolved_head_dim), mini_dtype)
+            mini = {"k": zeros, "v": zeros, "pos": jnp.zeros((), jnp.int32)}
+            logits, mini = model.prefill_at(params, {"tokens": tokens},
+                                            mini, lengths=length[None])
+            tok = sample_tokens(logits[:, 0, :], temp[None], topk[None],
+                                seed[None], jnp.zeros((1,), jnp.uint32),
+                                max_top_k=cfg.max_top_k)
+            kv = write_slot(kv, slot, mini["k"], mini["v"])
+            return tok[0], kv
+
+        def decode_fn(params, kv, pos, tokens, temps, topks, seeds, steps):
+            cache = {"k": kv["k"], "v": kv["v"], "pos": pos}
+            logits, cache = model.decode_step(params, tokens, cache)
+            tok = sample_tokens(logits[:, 0, :], temps, topks, seeds, steps,
+                                max_top_k=cfg.max_top_k)
+            return tok, {"k": cache["k"], "v": cache["v"]}
+
+        return (jax.jit(prefill_fn, donate_argnums=1),
+                jax.jit(decode_fn, donate_argnums=1))
+
+    # -- request API -------------------------------------------------------
+    def submit(self, req: GenerationRequest) -> None:
+        self.scheduler.submit(req)
+        self._results[req.rid] = GenerationResult(
+            rid=req.rid, prompt_len=req.prompt_len, tokens=[],
+            t_enqueue=time.perf_counter())
+
+    def warmup(self, reqs) -> Dict[str, int]:
+        """Compile every prompt bucket's prefill program plus the decode
+        program before timing starts: one short clone per distinct bucket
+        in ``reqs`` (budget clipped so the clone always fits max_len), and
+        a minimal 2-token request if none of the clones had room to decode.
+        Uses negative rids (callers' traces use non-negative ones); returns
+        the post-warmup :meth:`compile_counts` snapshot."""
+        seen = {}
+        for r in reqs:
+            seen.setdefault(self.scheduler.bucket_for(r.prompt_len), r)
+        wid = -1
+        decode_warmed = False
+        for _, r in sorted(seen.items()):
+            nnew = min(2, self.cfg.max_len - r.prompt_len)
+            decode_warmed |= nnew >= 2
+            self.submit(GenerationRequest(rid=wid, prompt=r.prompt,
+                                          max_new_tokens=nnew,
+                                          sampling=r.sampling))
+            wid -= 1
+        if seen and not decode_warmed:
+            self.submit(GenerationRequest(
+                rid=wid, prompt=np.asarray([1], np.int32), max_new_tokens=2))
+        self.run()
+        return self.compile_counts()
+
+    def step(self) -> None:
+        """Admit every admissible request (one bucketed prefill each), then
+        run one decode step for all slots."""
+        sched = self.scheduler
+        while (adm := sched.admit()) is not None:
+            slot, req = adm
+            w = sched.bucket_for(req.prompt_len)
+            padded = np.zeros((1, w), np.int32)
+            padded[0, :req.prompt_len] = req.prompt
+            sp = req.sampling
+            tok_dev, self.kv = self._prefill(
+                self.params, self.kv, jnp.asarray(padded),
+                np.int32(req.prompt_len), np.int32(slot),
+                np.float32(sp.temperature), np.int32(sp.top_k),
+                np.uint32(sp.seed))
+            tok = int(tok_dev)
+            now = time.perf_counter()
+            res = self._results[req.rid]
+            res.t_first_token = now
+            res.tokens.append(tok)
+            state = sched.slots[slot]
+            state.generated = 1
+            self._pos[slot] = req.prompt_len
+            self._tok[slot] = tok
+            self._temps[slot] = sp.temperature
+            self._topks[slot] = sp.top_k
+            self._seeds[slot] = np.uint32(sp.seed)
+            self._steps[slot] = 1
+            if state.done or tok == req.eos_id:
+                self._finish(slot, now)
+
+        if sched.num_active == 0:
+            return
+        tok_dev, self.kv = self._decode(
+            self.params, self.kv, jnp.asarray(self._pos),
+            jnp.asarray(self._tok[:, None]), jnp.asarray(self._temps),
+            jnp.asarray(self._topks), jnp.asarray(self._seeds),
+            jnp.asarray(self._steps))
+        toks = np.asarray(tok_dev)            # one int32 per slot per step
+        now = time.perf_counter()
+        self.decode_steps += 1
+        self.active_slot_steps += sched.num_active
+        for slot in sched.active_slots():
+            state = sched.slots[slot]
+            tok = int(toks[slot])
+            state.generated += 1
+            self._results[state.request.rid].tokens.append(tok)
+            self._pos[slot] += 1
+            self._tok[slot] = tok
+            self._steps[slot] += 1
+            if state.done or tok == state.request.eos_id:
+                self._finish(slot, now)
+
+    def _finish(self, slot: int, now: float) -> None:
+        req = self.scheduler.retire(slot)
+        res = self._results.pop(req.rid)
+        res.t_finish = now
+        self._done.append(res)
+        # park the freed slot: greedy token 0 at position 0, overwritten by
+        # the next admission's prefill before it is ever attended
+        self._pos[slot] = 0
+        self._tok[slot] = 0
+        self._temps[slot] = 0.0
+        self._topks[slot] = 0
+        self._seeds[slot] = 0
+        self._steps[slot] = 0
+
+    def run(self, max_steps: int = 1_000_000) -> List[GenerationResult]:
+        """Drive until every submitted request completes; returns results
+        in completion order."""
+        for _ in range(max_steps):
+            if self.scheduler.idle:
+                break
+            self.step()
+        assert self.scheduler.idle, "engine stopped with work outstanding"
+        out, self._done = self._done, []
+        return out
+
+    # -- introspection -----------------------------------------------------
+    def compile_counts(self) -> Dict[str, Optional[int]]:
+        """Compiled-program counts (prefill: one per prompt bucket seen;
+        decode: 1). Flat across a post-warmup trace ⇔ no recompilation.
+        ``None`` when the jit cache size is unavailable (private jax API
+        moved) — callers must treat that as UNKNOWN, never as "no
+        recompilation"."""
+        def size(f) -> Optional[int]:
+            try:
+                return int(f._cache_size())
+            except Exception:
+                return None
+        return {"prefill": size(self._prefill), "decode": size(self._decode)}
+
+    def kv_cache_bytes(self) -> int:
+        return cache_bytes(self.kv)
+
+    def utilization(self) -> float:
+        if self.decode_steps == 0:
+            return 0.0
+        return self.active_slot_steps / (self.decode_steps
+                                         * self.cfg.num_slots)
+
+
+__all__ = ["Engine", "EngineConfig", "GenerationRequest", "GenerationResult"]

@@ -1,0 +1,214 @@
+"""Slot-indexed, optionally quantized KV cache for the serving engine.
+
+The cache is a plain pytree (it flows through ``jax.jit`` / ``lax.scan`` /
+donation like the rest of the model state):
+
+    {"k": <storage>, "v": <storage>, "pos": (num_slots,) int32}
+
+where ``<storage>`` is either a dense ``(L, S, T, Hk, D)`` array (``L``
+layers, ``S`` slots, ``T`` max_len) or a :class:`QuantizedKV` — INT8 codes
+plus per-(token, head, group) float16 scale/zero, groups tiling the
+head_dim axis ("per-head-group"). INT8 storage costs ``1 + 4/group`` bytes
+per element vs 2 for bf16, i.e. ~½ the resident bytes at ``group ≥ 32``.
+
+Reads dequantize at the attention boundary (``models/layers.attn_apply``):
+the reference path is pure jnp; on TPU the Pallas ``kv_dequant`` kernel
+(``repro.kernels.ops``) does the expansion in VMEM. Dispatch follows the
+same ``repro.quant.matmul_impl`` switch as the weight kernels.
+
+Writes quantize the incoming k/v: per-slot decode writes scatter one token
+at each slot's own position (``pos`` is a vector — the engine convention),
+prefill writes splice a whole slot row (:func:`write_slot`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.qtensor import resolved_impl
+
+
+class QuantizedKV(NamedTuple):
+    """INT8 cache storage: codes + per-(…, head, group) affine params.
+
+    ``codes``: (..., T, Hk, D) uint8; ``scale``/``zero``: (..., T, Hk, D/g)
+    float16. ``group_size`` is static (pytree aux), so QuantizedKV leaves
+    scan/stack/donate like dense arrays with the group layout baked in.
+    """
+    codes: jax.Array
+    scale: jax.Array
+    zero: jax.Array
+    group_size: int
+
+    def nbytes(self) -> int:
+        return int(self.codes.size * self.codes.dtype.itemsize
+                   + self.scale.size * self.scale.dtype.itemsize
+                   + self.zero.size * self.zero.dtype.itemsize)
+
+
+jax.tree_util.register_pytree_node(
+    QuantizedKV,
+    lambda q: ((q.codes, q.scale, q.zero), q.group_size),
+    lambda aux, ch: QuantizedKV(ch[0], ch[1], ch[2], aux))
+
+
+# ---------------------------------------------------------------------------
+# quantize / dequantize (per-head-group asymmetric INT8)
+# ---------------------------------------------------------------------------
+
+def kv_quantize(x: jax.Array, group_size: int) -> QuantizedKV:
+    """x: (..., D) float → codes (..., D) uint8 + scale/zero (..., D/g) f16.
+
+    Asymmetric min/max over each head_dim group, with the grid stretched to
+    include 0 (the ONNX convention) so the zero-point is always exactly
+    representable — one-sided groups (e.g. a constant bias channel) round-
+    trip instead of collapsing, and zero-initialized cache rows stay
+    exactly zero. Scales are clamped to a float16-safe minimum."""
+    d = x.shape[-1]
+    assert d % group_size == 0, (d, group_size)
+    g = x.reshape(*x.shape[:-1], d // group_size, group_size).astype(jnp.float32)
+    gmax = jnp.maximum(g.max(axis=-1), 0.0)
+    gmin = jnp.minimum(g.min(axis=-1), 0.0)
+    scale = jnp.maximum((gmax - gmin) / 255.0, 1e-4)
+    zero = jnp.clip(jnp.round(-gmin / scale), 0.0, 255.0)
+    codes = jnp.clip(jnp.round(g / scale[..., None]) + zero[..., None],
+                     0.0, 255.0).astype(jnp.uint8)
+    return QuantizedKV(codes=codes.reshape(*x.shape[:-1], d),
+                       scale=scale.astype(jnp.float16),
+                       zero=zero.astype(jnp.float16),
+                       group_size=group_size)
+
+
+def _reference_dequant(q: QuantizedKV, dtype) -> jax.Array:
+    d = q.codes.shape[-1]
+    g = q.codes.reshape(*q.codes.shape[:-1], d // q.group_size,
+                        q.group_size).astype(jnp.float32)
+    deq = (g - q.zero[..., None].astype(jnp.float32)) \
+        * q.scale[..., None].astype(jnp.float32)
+    return deq.reshape(q.codes.shape).astype(dtype)
+
+
+def kv_dequantize(q: QuantizedKV, dtype=jnp.float32) -> jax.Array:
+    """Dense (..., T, Hk, D) values. Follows ``repro.quant.matmul_impl``:
+    the Pallas kernel on the "kernel" path (native on TPU, interpret in
+    tests), pure jnp on "reference" (the CPU default)."""
+    if resolved_impl() == "reference":
+        return _reference_dequant(q, dtype)
+    from repro.kernels import ops     # local: kernels are TPU-optional
+    lead = q.codes.shape[:-2]
+    hk, d = q.codes.shape[-2:]
+    rows = 1
+    for s in lead:
+        rows *= s
+    flat = ops.kv_dequant(q.codes.reshape(rows, hk * d),
+                          q.scale.reshape(rows, -1),
+                          q.zero.reshape(rows, -1), q.group_size)
+    return flat.reshape(*lead, hk, d).astype(dtype)
+
+
+def kv_update(q: QuantizedKV, x: jax.Array, pos) -> QuantizedKV:
+    """Write new tokens x (B, s, Hk, D) into the (B, T, Hk, D) storage.
+
+    ``pos`` scalar → splice s tokens at a uniform position (the static
+    serving path); ``pos`` vector (B,) → scatter one token per row at that
+    row's own position (the engine decode path, s == 1)."""
+    new = kv_quantize(x, q.group_size)
+    if getattr(pos, "ndim", 0) == 1:
+        assert x.shape[1] == 1, "per-slot writes are one token per step"
+        b = x.shape[0]
+        idx = jnp.arange(b)
+        return QuantizedKV(
+            q.codes.at[idx, pos].set(new.codes[:, 0]),
+            q.scale.at[idx, pos].set(new.scale[:, 0]),
+            q.zero.at[idx, pos].set(new.zero[:, 0]),
+            q.group_size)
+    return QuantizedKV(
+        jax.lax.dynamic_update_slice_in_dim(q.codes, new.codes, pos, axis=1),
+        jax.lax.dynamic_update_slice_in_dim(q.scale, new.scale, pos, axis=1),
+        jax.lax.dynamic_update_slice_in_dim(q.zero, new.zero, pos, axis=1),
+        q.group_size)
+
+
+# ---------------------------------------------------------------------------
+# slot-cache construction / bookkeeping
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class KVCacheConfig:
+    """Shape/storage policy for the engine's slot cache."""
+    num_slots: int
+    max_len: int
+    dtype: object = jnp.float32      # dense storage dtype
+    quantized: bool = False          # INT8 per-head-group storage
+    group_size: int = 0              # 0 → head_dim (one group per head)
+
+
+def init_slot_cache(model_cfg, cfg: KVCacheConfig) -> dict:
+    """Fresh {"k", "v", "pos"} cache: (L, S, T, Hk, D) storage, per-slot
+    positions. The layer axis leads so ``lax.scan`` over blocks slices one
+    layer's (S, T, Hk, D) cache per step — identical to the static path."""
+    shape = (model_cfg.num_layers, cfg.num_slots, cfg.max_len,
+             model_cfg.num_kv_heads, model_cfg.resolved_head_dim)
+    if cfg.quantized:
+        g = cfg.group_size or model_cfg.resolved_head_dim
+        assert model_cfg.resolved_head_dim % g == 0, (shape, g)
+        store = QuantizedKV(
+            codes=jnp.zeros(shape, jnp.uint8),
+            scale=jnp.full(shape[:-1] + (shape[-1] // g,), 1e-4, jnp.float16),
+            zero=jnp.zeros(shape[:-1] + (shape[-1] // g,), jnp.float16),
+            group_size=g)
+        k = store
+        v = QuantizedKV(jnp.zeros_like(store.codes),
+                        jnp.full_like(store.scale, 1e-4),
+                        jnp.zeros_like(store.zero), g)
+    else:
+        k = jnp.zeros(shape, cfg.dtype)
+        v = jnp.zeros(shape, cfg.dtype)
+    return {"k": k, "v": v, "pos": jnp.zeros((cfg.num_slots,), jnp.int32)}
+
+
+def write_slot(cache: dict, slot, k_new: jax.Array, v_new: jax.Array) -> dict:
+    """Splice a freshly prefilled slot row into the big cache.
+
+    ``k_new``/``v_new``: (L, 1, W, Hk, D) dense floats (the prefill
+    mini-cache); written at [:, slot, :W]. W beyond max_len is clipped —
+    padded bucket tails past the cache end never hold live tokens."""
+    out = dict(cache)
+    for name, new in (("k", k_new), ("v", v_new)):
+        entry = cache[name]
+        t = (entry.codes if isinstance(entry, QuantizedKV) else entry).shape[2]
+        new = new[:, :, :min(new.shape[2], t)]
+        if isinstance(entry, QuantizedKV):
+            q = kv_quantize(new, entry.group_size)
+            entry = QuantizedKV(
+                jax.lax.dynamic_update_slice(
+                    entry.codes, q.codes, (0, slot, 0, 0, 0)),
+                jax.lax.dynamic_update_slice(
+                    entry.scale, q.scale, (0, slot, 0, 0, 0)),
+                jax.lax.dynamic_update_slice(
+                    entry.zero, q.zero, (0, slot, 0, 0, 0)),
+                entry.group_size)
+        else:
+            entry = jax.lax.dynamic_update_slice(
+                entry, new.astype(entry.dtype), (0, slot, 0, 0, 0))
+        out[name] = entry
+    return out
+
+
+def cache_bytes(cache: dict) -> int:
+    """Resident bytes of the K/V storage (excludes the tiny pos vector)."""
+    total = 0
+    for name in ("k", "v"):
+        entry = cache[name]
+        if isinstance(entry, QuantizedKV):
+            total += entry.nbytes()
+        else:
+            total += int(entry.size * entry.dtype.itemsize)
+    return total
+
+
+__all__ = ["QuantizedKV", "KVCacheConfig", "init_slot_cache", "write_slot",
+           "cache_bytes", "kv_quantize", "kv_dequantize", "kv_update"]

@@ -1,0 +1,61 @@
+"""Per-request token sampling, folded into the jitted serving steps.
+
+Each slot carries its own (temperature, top_k, seed) as *array* inputs to
+the step functions — one compiled program serves any mix of greedy and
+sampled requests, and decode still transfers one int32 per slot per step
+(the PR-3 argmax-folding convention, generalized).
+
+Determinism: the sampling key for a request's n-th generated token is
+``fold_in(PRNGKey(seed), n)`` — it depends only on the request's seed and
+the token index, never on which slot the request landed in or what else is
+in the batch, so replays and slot reshuffles reproduce bit-identical
+streams.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decode policy. ``temperature == 0`` → greedy (argmax);
+    ``top_k == 0`` → no truncation. ``top_k`` is truncated to the engine's
+    static ``max_top_k`` (the top-k filter ranks inside a fixed-size
+    ``lax.top_k`` so per-slot k stays a traced value)."""
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
+
+
+def sample_tokens(logits: jax.Array, temps: jax.Array, top_ks: jax.Array,
+                  seeds: jax.Array, steps: jax.Array, *,
+                  max_top_k: int = 64) -> jax.Array:
+    """logits (B, V) → (B,) int32 tokens under per-row sampling params.
+
+    temps/top_ks/seeds/steps are (B,) arrays; ``steps`` is the per-request
+    generated-token index used to fold the key. Rows with temp <= 0 take
+    the argmax (bit-identical to the greedy static path)."""
+    b, v = logits.shape
+    kk = min(max_top_k, v)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def one(lg, temp, k, seed, step):
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+        scaled = lg.astype(jnp.float32) / jnp.maximum(temp, 1e-6)
+        if kk > 0:
+            vals = jax.lax.top_k(scaled, kk)[0]
+            thr = vals[jnp.clip(k - 1, 0, kk - 1)]
+            scaled = jnp.where((k > 0) & (scaled < thr), -jnp.inf, scaled)
+        return jax.random.categorical(key, scaled).astype(jnp.int32)
+
+    sampled = jax.vmap(one)(logits, temps.astype(jnp.float32),
+                            top_ks.astype(jnp.int32),
+                            seeds.astype(jnp.uint32),
+                            steps.astype(jnp.uint32))
+    return jnp.where(temps <= 0.0, greedy, sampled)
+
+
+__all__ = ["SamplingParams", "sample_tokens"]

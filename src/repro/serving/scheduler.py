@@ -1,0 +1,149 @@
+"""Host-side request scheduler for the continuous-batching engine.
+
+Pure bookkeeping, no jax: a FIFO admission queue, a slot free-list, and
+per-slot (request, generated-count) state. The engine asks the
+scheduler *what* to run; every device-facing decision that would change
+compiled shapes goes through :func:`Scheduler.bucket_for` (prompt-length
+bucketing), so the step functions compile once per bucket and never again.
+
+Invariants (tested in tests/test_engine.py):
+- admission is FIFO: requests start in submit order;
+- a slot is EXCLUSIVE: never two live requests on one slot;
+- retire frees the slot for reuse within the same run;
+- a request is admitted only if prompt_len + max_new_tokens fits max_len.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, List, Optional
+
+import numpy as np
+
+from repro.serving.sampling import SamplingParams
+
+
+@dataclasses.dataclass
+class GenerationRequest:
+    """One generation job: prompt tokens + decode budget + sampling policy.
+    ``eos_id < 0`` disables early stopping (the synthetic-corpus default)."""
+    rid: int
+    prompt: np.ndarray                 # (prompt_len,) int32
+    max_new_tokens: int
+    sampling: SamplingParams = SamplingParams()
+    eos_id: int = -1
+
+    @property
+    def prompt_len(self) -> int:
+        return int(len(self.prompt))
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    """Completed request: generated tokens + latency breadcrumbs (host
+    wall-clock seconds, filled by the engine)."""
+    rid: int
+    prompt_len: int
+    tokens: List[int]
+    t_enqueue: float = 0.0
+    t_first_token: float = 0.0
+    t_finish: float = 0.0
+
+    @property
+    def latency(self) -> float:
+        return self.t_finish - self.t_enqueue
+
+    @property
+    def ttft(self) -> float:
+        return self.t_first_token - self.t_enqueue
+
+
+@dataclasses.dataclass
+class SlotState:
+    """Live per-slot decode state. The device-facing KV write position is
+    the engine's per-slot ``pos`` array (always request.prompt_len +
+    generated - 1 while live), kept in one place to avoid drift."""
+    request: GenerationRequest
+    generated: int = 0                 # tokens sampled so far
+
+    @property
+    def done(self) -> bool:
+        return self.generated >= self.request.max_new_tokens
+
+
+def default_buckets(max_len: int) -> tuple:
+    """Power-of-two prompt buckets 8, 16, … covering max_len."""
+    out, b = [], 8
+    while b < max_len:
+        out.append(b)
+        b *= 2
+    out.append(max_len)
+    return tuple(out)
+
+
+class Scheduler:
+    """FIFO admission over a fixed set of device slots."""
+
+    def __init__(self, num_slots: int, max_len: int,
+                 prompt_buckets: tuple = ()):
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.buckets = tuple(sorted(prompt_buckets)) or default_buckets(max_len)
+        self.queue: Deque[GenerationRequest] = deque()
+        self.free: Deque[int] = deque(range(num_slots))
+        self.slots: List[Optional[SlotState]] = [None] * num_slots
+
+    # -- admission ---------------------------------------------------------
+    def submit(self, req: GenerationRequest) -> None:
+        if req.prompt_len + req.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt {req.prompt_len} + "
+                f"max_new {req.max_new_tokens} exceeds max_len {self.max_len}")
+        if req.prompt_len > self.buckets[-1]:
+            raise ValueError(
+                f"request {req.rid}: prompt {req.prompt_len} exceeds the "
+                f"largest prompt bucket {self.buckets[-1]}")
+        if req.prompt_len < 1:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        self.queue.append(req)
+
+    def admit(self) -> Optional[tuple]:
+        """Pop the FIFO head onto a free slot → (slot, request), or None."""
+        if not self.queue or not self.free:
+            return None
+        slot = self.free.popleft()
+        req = self.queue.popleft()
+        assert self.slots[slot] is None, f"slot {slot} double-booked"
+        self.slots[slot] = SlotState(request=req)
+        return slot, req
+
+    def retire(self, slot: int) -> GenerationRequest:
+        state = self.slots[slot]
+        assert state is not None, f"retiring empty slot {slot}"
+        self.slots[slot] = None
+        self.free.append(slot)
+        return state.request
+
+    # -- queries -----------------------------------------------------------
+    def bucket_for(self, prompt_len: int) -> int:
+        for b in self.buckets:
+            if prompt_len <= b:
+                return b
+        # unreachable for admitted requests: submit() rejects prompts
+        # beyond the largest bucket
+        return self.buckets[-1]
+
+    @property
+    def num_active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    def active_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is not None]
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and self.num_active == 0
+
+
+__all__ = ["GenerationRequest", "GenerationResult", "SlotState", "Scheduler",
+           "default_buckets"]

@@ -111,12 +111,58 @@ def rules_for_cell(mesh: Optional[Mesh], family: str, kind: str,
     return ShardingRules.for_mesh(mesh)
 
 
+def qtensor_logical_axes(dense_axes, qt):
+    """Per-child logical axes for a packed QTensor leaf.
+
+    ``dense_axes`` are the axes the *dense* leaf would carry in stored
+    orientation ``(…lead, d_in, d_out)``; the QTensor children live in
+    paper orientation, so ``packed`` gets ``(…lead, d_out_ax, d_in_ax)``,
+    ``scale``/``zero`` put their group axis (which tiles d_in) on the
+    d_in axis name, and ``col_scale`` keeps the d_in axis. Returned as a
+    QTensor-of-tuples so the axes tree mirrors the param tree node-for-node
+    (divisibility fallbacks still apply per child at spec time)."""
+    from repro.quant import QTensor
+    lead = tuple(dense_axes[:-2])
+    d_in_ax, d_out_ax = dense_axes[-2], dense_axes[-1]
+    return QTensor(
+        packed=lead + (d_out_ax, d_in_ax),
+        scale=lead + (d_out_ax, d_in_ax),
+        zero=lead + (d_out_ax, d_in_ax),
+        bits=qt.bits, group_size=qt.group_size, shape=qt.shape,
+        col_scale=(lead + (d_in_ax,)) if qt.col_scale is not None else None)
+
+
+def adapt_logical_axes(logical_tree, params):
+    """QTensor-aware param axes: wherever ``params`` holds a packed QTensor
+    leaf (a packed-checkpoint restore), expand the model's dense leaf axes
+    into per-child axes so packed leaves shard under TP/FSDP instead of
+    falling back to replicated. Dense leaves pass through untouched."""
+    from repro.quant import QTensor
+    if isinstance(params, QTensor):
+        return qtensor_logical_axes(logical_tree, params)
+    if isinstance(logical_tree, dict):
+        return {k: adapt_logical_axes(logical_tree[k], params[k])
+                for k in logical_tree}
+    return logical_tree
+
+
 def tree_specs(rules: ShardingRules, logical_tree, shape_tree):
     """Mirror-walk a logical-axes tree against a ShapeDtypeStruct tree and
-    produce PartitionSpecs (dicts of dicts; leaves are tuples of axis names)."""
+    produce PartitionSpecs (dicts of dicts; leaves are tuples of axis
+    names). QTensor nodes (from :func:`adapt_logical_axes`) map per child."""
+    from repro.quant import QTensor
     if isinstance(logical_tree, dict):
         return {k: tree_specs(rules, logical_tree[k], shape_tree[k])
                 for k in logical_tree}
+    if isinstance(logical_tree, QTensor):
+        qt = logical_tree
+        return QTensor(
+            packed=rules.spec(qt.packed, shape_tree.packed.shape),
+            scale=rules.spec(qt.scale, shape_tree.scale.shape),
+            zero=rules.spec(qt.zero, shape_tree.zero.shape),
+            bits=qt.bits, group_size=qt.group_size, shape=qt.shape,
+            col_scale=(rules.spec(qt.col_scale, shape_tree.col_scale.shape)
+                       if qt.col_scale is not None else None))
     return rules.spec(logical_tree, shape_tree.shape)
 
 
@@ -156,4 +202,5 @@ def hint(x: jax.Array, rules: ShardingRules, logical_axes) -> jax.Array:
 
 NO_RULES = ShardingRules(mesh=None)
 
-__all__ = ["ShardingRules", "hint", "NO_RULES", "P"]
+__all__ = ["ShardingRules", "adapt_logical_axes", "hint", "NO_RULES", "P",
+           "qtensor_logical_axes"]

@@ -198,3 +198,71 @@ w2 = np.asarray(s_shard["params"]["blocks"]["attn"]["wq"])
 np.testing.assert_allclose(w1, w2, rtol=2e-3, atol=2e-4)
 print("ok")
 """, timeout=900)
+
+
+def test_moe_a2a_packed_experts():
+    """Stacked QTensor experts ride the all-to-all path when the expert
+    count tiles the TP axis (slot factor r == 1): a2a == masked-dense on
+    the same packed weights, and moe_apply auto-routes to a2a."""
+    run_multidevice("""
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_tiny_config
+from repro.models.moe import moe_params, moe_apply_dense, moe_apply_a2a, moe_apply
+from repro.sharding import ShardingRules
+from repro.launch.mesh import make_mesh
+from repro.quant import QTensor
+from repro import compat
+cfg = dataclasses.replace(get_tiny_config("qwen3-moe-235b-a22b"), capacity_factor=8.0)
+mesh = make_mesh((2, 4), ("data", "model"))
+rules = ShardingRules.for_mesh(mesh)
+p = moe_params(jax.random.PRNGKey(0), cfg)
+def pack(w):   # (E, d_in, d_out) dense stack -> stacked per-expert QTensor
+    qts = [QTensor.from_dense(w[e].T, bits=4, group_size=16) for e in range(w.shape[0])]
+    return jax.tree.map(lambda *a: jnp.stack(a), *qts)
+pq = dict(p, wu=pack(p["wu"]), wd=pack(p["wd"]), wg=pack(p["wg"]))
+x = jax.random.normal(jax.random.PRNGKey(1), (8, 64, cfg.d_model))
+y_dense = moe_apply_dense(pq, x, cfg)
+with compat.set_mesh(mesh):
+    y_a2a = jax.jit(lambda p, x: moe_apply_a2a(p, x, cfg, rules))(pq, x)
+    y_auto = jax.jit(lambda p, x: moe_apply(p, x, cfg, rules))(pq, x)
+np.testing.assert_allclose(np.asarray(y_dense), np.asarray(y_a2a), rtol=2e-4, atol=2e-4)
+np.testing.assert_allclose(np.asarray(y_a2a), np.asarray(y_auto), rtol=0, atol=0)
+print("ok")
+""", timeout=900)
+
+
+def test_qtensor_logical_axes_shard_packed_leaves():
+    """adapt_logical_axes expands dense leaf axes into per-child QTensor
+    axes; tree_shardings then shards packed/scale/zero over TP/FSDP instead
+    of replicating (the packed-checkpoint-restore path)."""
+    run_multidevice("""
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding
+from repro.launch.mesh import make_mesh
+from repro.sharding import ShardingRules, adapt_logical_axes, tree_specs, tree_shardings, P
+from repro.quant import QTensor
+mesh = make_mesh((2, 4), ("data", "model"))
+rules = ShardingRules.for_mesh(mesh)
+w = jax.random.normal(jax.random.PRNGKey(0), (16, 64))   # paper (d_out, d_in)
+qt = QTensor.from_dense(w, bits=4, group_size=32,
+                        col_scale=jnp.ones((64,), jnp.float32))
+stacked = jax.tree.map(lambda a: jnp.stack([a] * 3), qt)
+params = {"blocks": {"attn": {"wq": stacked, "norm": jnp.ones((3, 8))}}}
+axes = {"blocks": {"attn": {"wq": (None, "fsdp", "tp"), "norm": (None, None)}}}
+adapted = adapt_logical_axes(axes, params)
+wq_ax = adapted["blocks"]["attn"]["wq"]
+assert isinstance(wq_ax, QTensor) and wq_ax.packed == (None, "tp", "fsdp")
+specs = tree_specs(rules, adapted, jax.eval_shape(lambda: params))
+wq = specs["blocks"]["attn"]["wq"]
+assert wq.packed == P(None, "model", ("data",))          # sharded, not replicated
+assert wq.scale == P(None, "model", ("data",))
+assert wq.col_scale == P(None, ("data",))
+assert specs["blocks"]["attn"]["norm"] == P(None, None)
+sh = tree_shardings(rules, adapted, jax.eval_shape(lambda: params))
+placed = jax.device_put(params, sh)                      # actually places on mesh
+assert isinstance(placed["blocks"]["attn"]["wq"], QTensor)
+assert isinstance(placed["blocks"]["attn"]["wq"].packed.sharding, NamedSharding)
+assert str(placed["blocks"]["attn"]["wq"].packed.sharding.spec) == str(wq.packed)
+print("ok")
+""", timeout=900)

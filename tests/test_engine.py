@@ -1,0 +1,283 @@
+"""Continuous-batching engine: scheduler invariants, slot-cache
+quantization, engine-vs-static greedy parity, per-slot sampling
+determinism, and the no-recompilation-after-warmup contract."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_tiny_config
+from repro.models import build_model
+from repro.quant import matmul_impl
+from repro.serving import (Engine, EngineConfig, GenerationRequest,
+                           KVCacheConfig, SamplingParams, Scheduler,
+                           cache_bytes, init_slot_cache, kv_dequantize,
+                           kv_quantize, kv_update, sample_tokens)
+from repro.serving.kv_cache import _reference_dequant
+from repro.serving.scheduler import default_buckets
+
+
+# ---------------------------------------------------------------------------
+# shared tiny model (compiles are the dominant test cost)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_lm():
+    cfg = get_tiny_config("llama32-1b")
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _requests(cfg, lens, gens, rng=None, **sampling):
+    rng = rng or np.random.default_rng(0)
+    return [GenerationRequest(
+                rid=i,
+                prompt=rng.integers(1, cfg.vocab_size, size=l).astype(np.int32),
+                max_new_tokens=g,
+                sampling=SamplingParams(seed=100 + i, **sampling))
+            for i, (l, g) in enumerate(zip(lens, gens))]
+
+
+def _static_step_fns(model):
+    from repro.launch.serve import make_step_fns
+    return make_step_fns(model)
+
+
+# ---------------------------------------------------------------------------
+# scheduler invariants
+# ---------------------------------------------------------------------------
+
+def test_scheduler_fifo_admission_and_slot_reuse():
+    s = Scheduler(num_slots=2, max_len=64)
+    for i in range(5):
+        s.submit(GenerationRequest(rid=i, prompt=np.arange(4, dtype=np.int32),
+                                   max_new_tokens=4))
+    a0 = s.admit()
+    a1 = s.admit()
+    assert a0[1].rid == 0 and a1[1].rid == 1          # FIFO order
+    assert {a0[0], a1[0]} == {0, 1}                   # distinct slots
+    assert s.admit() is None                          # full: no admission
+    assert s.num_active == 2 and not s.idle
+
+    freed = a0[0]
+    assert s.retire(freed).rid == 0                   # eviction frees slot
+    a2 = s.admit()
+    assert a2[0] == freed and a2[1].rid == 2          # slot reused, FIFO kept
+    for slot in list(s.active_slots()):
+        s.retire(slot)
+    assert s.admit()[1].rid == 3 and s.admit()[1].rid == 4
+    assert s.admit() is None and len(s.queue) == 0
+
+
+def test_scheduler_rejects_oversized_and_empty_requests():
+    s = Scheduler(num_slots=1, max_len=16)
+    with pytest.raises(ValueError):
+        s.submit(GenerationRequest(rid=0, prompt=np.zeros(10, np.int32),
+                                   max_new_tokens=7))   # 10 + 7 > 16
+    with pytest.raises(ValueError):
+        s.submit(GenerationRequest(rid=1, prompt=np.zeros(0, np.int32),
+                                   max_new_tokens=4))
+
+
+def test_prompt_bucketing():
+    assert default_buckets(64) == (8, 16, 32, 64)
+    assert default_buckets(48) == (8, 16, 32, 48)
+    s = Scheduler(num_slots=1, max_len=48)
+    assert s.bucket_for(1) == 8 and s.bucket_for(8) == 8
+    assert s.bucket_for(9) == 16 and s.bucket_for(33) == 48
+    s2 = Scheduler(num_slots=1, max_len=64, prompt_buckets=(12, 24))
+    assert s2.bucket_for(5) == 12 and s2.bucket_for(13) == 24
+    # prompts beyond the largest bucket are rejected at submit time (the
+    # bucketed prefill pad could not hold them)
+    with pytest.raises(ValueError):
+        s2.submit(GenerationRequest(rid=9, prompt=np.zeros(30, np.int32),
+                                    max_new_tokens=4))
+
+
+# ---------------------------------------------------------------------------
+# KV cache quantization
+# ---------------------------------------------------------------------------
+
+def test_kv_quantize_roundtrip_and_kernel_parity(rng):
+    x = jnp.asarray(rng.normal(size=(3, 9, 2, 32)), jnp.float32)
+    q = kv_quantize(x, 16)
+    deq = _reference_dequant(q, jnp.float32)
+    # int8 asymmetric per-group: error bounded by ~scale/2
+    assert float(jnp.abs(deq - x).max()) < 0.05
+    with matmul_impl("kernel"):                       # interpret-mode Pallas
+        deq_k = kv_dequantize(q)
+    np.testing.assert_array_equal(np.asarray(deq_k), np.asarray(deq))
+    # one-sided/constant groups round-trip (the grid always includes 0, so
+    # the zero-point is representable) and zero rows stay exactly zero
+    c = jnp.full((1, 1, 1, 32), 3.25)
+    qc = kv_quantize(c, 32)
+    np.testing.assert_allclose(np.asarray(_reference_dequant(qc, jnp.float32)),
+                               3.25, atol=0.02)
+    z = kv_quantize(jnp.zeros((1, 1, 1, 32)), 32)
+    assert float(jnp.abs(_reference_dequant(z, jnp.float32)).max()) == 0.0
+
+
+def test_kv_update_scalar_and_vector_writes(rng):
+    x = jnp.asarray(rng.normal(size=(2, 3, 2, 16)), jnp.float32)
+    base = kv_quantize(jnp.zeros((2, 8, 2, 16)), 16)
+    splice = kv_update(base, x, jnp.int32(2))         # scalar: rows 2..4
+    got = _reference_dequant(splice, jnp.float32)[:, 2:5]
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(_reference_dequant(
+                                   kv_quantize(x, 16), jnp.float32)))
+    tok = x[:, :1]
+    scatter = kv_update(base, tok, jnp.asarray([1, 6]))  # per-slot positions
+    deq = _reference_dequant(scatter, jnp.float32)
+    ref = _reference_dequant(kv_quantize(tok, 16), jnp.float32)
+    np.testing.assert_allclose(np.asarray(deq[0, 1]), np.asarray(ref[0, 0]))
+    np.testing.assert_allclose(np.asarray(deq[1, 6]), np.asarray(ref[1, 0]))
+    assert float(jnp.abs(deq[0, 2:]).max()) == 0.0    # rest untouched
+
+
+def test_int8_cache_bytes_about_half_of_dense(tiny_lm):
+    cfg, model, params = tiny_lm
+    dense = init_slot_cache(cfg, KVCacheConfig(num_slots=4, max_len=32,
+                                               dtype=jnp.bfloat16))
+    int8 = init_slot_cache(cfg, KVCacheConfig(num_slots=4, max_len=32,
+                                              quantized=True))
+    ratio = cache_bytes(dense) / cache_bytes(int8)
+    assert 1.5 <= ratio <= 2.0                        # ≈ half the bytes
+
+
+def test_quantized_cache_logit_tolerance(tiny_lm):
+    """INT8 KV cache vs dense through prefill + decode_step: prefill logits
+    are exact (attention reads the fresh dense K/V), decode logits are
+    within int8 tolerance."""
+    cfg, model, params = tiny_lm
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 12), 0,
+                              cfg.vocab_size)
+    dense = model.init_cache(2, 16, jnp.float32)
+    quant = init_slot_cache(cfg, KVCacheConfig(num_slots=2, max_len=16,
+                                               quantized=True))
+    quant["pos"] = jnp.zeros((), jnp.int32)           # static-style scalar pos
+    ld, cd = jax.jit(model.prefill)(params, {"tokens": toks}, dense)
+    lq, cq = jax.jit(model.prefill)(params, {"tokens": toks}, quant)
+    np.testing.assert_array_equal(np.asarray(ld), np.asarray(lq))
+    tok = jnp.argmax(ld[:, -1], -1)[:, None]
+    dd, _ = jax.jit(model.decode_step)(params, tok, cd)
+    dq, _ = jax.jit(model.decode_step)(params, tok, cq)
+    scale = float(jnp.abs(dd).max())
+    assert float(jnp.abs(dd - dq).max()) < 0.05 * scale
+
+
+# ---------------------------------------------------------------------------
+# engine: greedy parity, slot reuse, no recompilation
+# ---------------------------------------------------------------------------
+
+def test_engine_greedy_matches_static_path(tiny_lm):
+    """Acceptance: mixed-length trace through 4 slots (requests > slots, so
+    slots get reused mid-run) — every request's greedy output bit-identical
+    to the static path, with zero recompilation after warmup."""
+    cfg, model, params = tiny_lm
+    max_len = 64
+    reqs = _requests(cfg, lens=[5, 13, 8, 21, 3, 16, 9, 30],
+                     gens=[6, 3, 9, 4, 8, 5, 2, 7])
+    engine = Engine(model, params, EngineConfig(num_slots=4, max_len=max_len))
+    compiled = engine.warmup(reqs)
+    assert compiled["decode"] == 1                    # one program for all slots
+
+    for r in reqs:
+        engine.submit(r)
+    results = engine.run()
+    assert engine.compile_counts() == compiled        # no recompilation
+    assert len(results) == len(reqs)
+    by_rid = {r.rid: r for r in results}
+    from repro.launch.serve import static_greedy_reference
+    step_fns = _static_step_fns(model)        # hoisted: compile once
+    for req in reqs:
+        got = by_rid[req.rid].tokens
+        assert len(got) == req.max_new_tokens
+        assert got == static_greedy_reference(model, params, req, max_len,
+                                              step_fns), req.rid
+    assert engine.scheduler.idle
+    assert 0.0 < engine.utilization() <= 1.0
+
+
+def test_engine_warmup_fits_tight_budgets(tiny_lm):
+    """Warmup clones must respect prompt_len + max_new <= max_len even when
+    the trace's requests leave no decode headroom (gen=1 at a full-length
+    prompt): the clone's budget is clipped and decode still gets compiled
+    via the minimal fallback request."""
+    cfg, model, params = tiny_lm
+    engine = Engine(model, params, EngineConfig(num_slots=2, max_len=16))
+    reqs = _requests(cfg, lens=[15, 4], gens=[1, 2])
+    compiled = engine.warmup(reqs)                    # must not raise
+    assert compiled["decode"] == 1
+    for r in reqs:
+        engine.submit(r)
+    results = engine.run()
+    assert engine.compile_counts() == compiled
+    assert sorted(len(r.tokens) for r in results) == [1, 2]
+
+
+def test_engine_int8_cache_completes_with_half_bytes(tiny_lm):
+    cfg, model, params = tiny_lm
+    reqs = _requests(cfg, lens=[5, 13, 8, 21], gens=[6, 3, 9, 4])
+    dense = Engine(model, params,
+                   EngineConfig(num_slots=4, max_len=64,
+                                kv_dtype=jnp.bfloat16))
+    int8 = Engine(model, params,
+                  EngineConfig(num_slots=4, max_len=64, kv_quantized=True))
+    for r in reqs:
+        int8.submit(r)
+    res = int8.run()
+    assert sorted(len(r.tokens) for r in res) == sorted(
+        r.max_new_tokens for r in reqs)
+    ratio = dense.kv_cache_bytes() / int8.kv_cache_bytes()
+    assert 1.5 <= ratio <= 2.0
+
+
+# ---------------------------------------------------------------------------
+# per-slot sampling
+# ---------------------------------------------------------------------------
+
+def test_sample_tokens_semantics(rng):
+    logits = jnp.asarray(rng.normal(size=(4, 64)) * 3, jnp.float32)
+    temps = jnp.asarray([0.0, 1.0, 1.0, 0.7])
+    topks = jnp.asarray([0, 0, 5, 1])
+    seeds = jnp.asarray([0, 7, 7, 9], jnp.uint32)
+    steps = jnp.asarray([0, 3, 3, 1], jnp.uint32)
+    a = sample_tokens(logits, temps, topks, seeds, steps)
+    b = sample_tokens(logits, temps, topks, seeds, steps)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))  # deterministic
+    assert int(a[0]) == int(jnp.argmax(logits[0]))    # temp 0 → greedy
+    assert int(a[3]) == int(jnp.argmax(logits[3]))    # top_k 1 → greedy
+    # the key depends on (seed, step), never the slot: permutation-invariant
+    perm = jnp.asarray([2, 0, 3, 1])
+    c = sample_tokens(logits[perm], temps[perm], topks[perm], seeds[perm],
+                      steps[perm])
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(a)[np.asarray(perm)])
+    # top-k actually truncates: k=5 samples land in the top 5
+    many = sample_tokens(jnp.tile(logits[2][None], (32, 1)),
+                         jnp.full((32,), 1.5), jnp.full((32,), 5),
+                         jnp.arange(32, dtype=jnp.uint32),
+                         jnp.zeros((32,), jnp.uint32))
+    top5 = set(np.asarray(jax.lax.top_k(logits[2], 5)[1]).tolist())
+    assert set(np.asarray(many).tolist()) <= top5
+
+
+def test_engine_sampling_deterministic_across_runs(tiny_lm):
+    """Fixed per-request keys: two engines over the same sampled trace
+    produce identical token streams (key = fold_in(seed, token index),
+    independent of slot placement)."""
+    cfg, model, params = tiny_lm
+
+    def run(slots):
+        rng = np.random.default_rng(3)
+        reqs = _requests(cfg, lens=[5, 13, 8, 21, 9], gens=[6, 3, 9, 4, 5],
+                         rng=rng, temperature=0.9, top_k=8)
+        eng = Engine(model, params, EngineConfig(num_slots=slots, max_len=64))
+        for r in reqs:
+            eng.submit(r)
+        return {r.rid: r.tokens for r in eng.run()}
+
+    a = run(slots=4)
+    b = run(slots=2)          # different slot layout, same keys
+    assert a == b
+    assert any(len(set(t)) > 1 or len(t) == 1 for t in a.values())

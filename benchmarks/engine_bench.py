@@ -1,11 +1,20 @@
-"""Continuous-batching engine load test: dense-KV vs INT8-KV slot cache.
+"""Continuous-batching engine load test: dense-KV vs INT8-KV slot cache,
+plus burst-arrival and long-prompt scenarios.
 
 Generates a Zipf-length request trace (many short prompts/outputs, a heavy
 tail — the open-ended-serving regime), drives the engine at equal slot
 counts with the dense (bf16) and the INT8 per-head-group quantized KV
 cache, and reports throughput, p50/p99 request latency, time-to-first-token,
 slot utilization, resident cache bytes, and compiled-program counts (flat
-across the post-warmup trace ⇔ no recompilation).
+across the post-warmup trace ⇔ no recompilation). Two targeted scenarios
+ride along:
+
+- **burst** — a clump of same-bucket arrivals: batched admission must
+  cover the burst in far fewer prefill dispatches than requests (a slots-
+  wide burst costs ONE device call), with no post-warmup compiles;
+- **long_prompt** — prompts beyond the largest bucket stream through the
+  bucket-width chunked-prefill program; greedy output stays bit-identical
+  to the static path.
 
     PYTHONPATH=src python -m benchmarks.engine_bench [--tiny]
 
@@ -56,6 +65,10 @@ def run_engine(model, params, cfg, ecfg: EngineConfig, reqs):
         "ttft_p50_ms": 1e3 * ttfts[len(ttfts) // 2],
         "slot_utilization": engine.utilization(),
         "kv_cache_bytes": engine.kv_cache_bytes(),
+        "prefill_dispatches": engine.prefill_dispatches,
+        "prefill_admitted": engine.prefill_admitted,
+        "chunk_dispatches": engine.chunk_dispatches,
+        "chunked_admitted": engine.chunked_admitted,
         "compiled_programs": compiled,
         # None = jit cache sizes unavailable (UNKNOWN, not "no recompile")
         "recompiled_after_warmup": (compiled != compiled_warm
@@ -74,6 +87,63 @@ def check_parity(model, params, reqs, results, max_len, n_check: int,
         assert by_rid[req.rid] == ref, \
             f"engine/static divergence rid={req.rid}: {by_rid[req.rid]} != {ref}"
     return n_check
+
+
+def burst_scenario(model, params, cfg, *, slots, burst, plen, gen, seed=1):
+    """A clump of same-bucket arrivals (the bursty regime): batched
+    admission must cover the burst in ceil-ish(burst/slots) prefill
+    dispatches, not one per request."""
+    from repro.serving import GenerationRequest, SamplingParams
+    rng = np.random.default_rng(seed)
+    reqs = [GenerationRequest(
+                rid=i,
+                prompt=rng.integers(1, cfg.vocab_size,
+                                    size=plen).astype(np.int32),
+                max_new_tokens=gen, sampling=SamplingParams())
+            for i in range(burst)]
+    ecfg = EngineConfig(num_slots=slots, max_len=plen + gen,
+                        kv_dtype=jnp.float32)
+    row, results = run_engine(model, params, cfg, ecfg, reqs)
+    row.update(burst=burst, prompt_len=plen,
+               admitted_per_dispatch=row["prefill_admitted"]
+               / max(row["prefill_dispatches"], 1))
+    assert row["prefill_dispatches"] < burst, \
+        "burst admission must batch (fewer dispatches than requests)"
+    assert row["recompiled_after_warmup"] is not True
+    n = check_parity(model, params, reqs, results, plen + gen,
+                     min(4, burst), step_fns=make_step_fns(model))
+    row["parity_checked"] = n
+    return row
+
+
+def long_prompt_scenario(model, params, cfg, *, slots, buckets, max_len,
+                         gen, seed=2):
+    """Prompts beyond the largest bucket: chunked prefill streams them
+    through the bucket-width program — greedy output stays bit-identical
+    to the static path, with no max_len-wide compile."""
+    from repro.serving import GenerationRequest, SamplingParams
+    rng = np.random.default_rng(seed)
+    wmax = buckets[-1]
+    lens = [int(l) for l in
+            rng.integers(wmax + 1, max_len - gen, size=2 * slots)]
+    lens[0] = max_len - gen                        # the max_len-scale tail
+    reqs = [GenerationRequest(
+                rid=i,
+                prompt=rng.integers(1, cfg.vocab_size,
+                                    size=l).astype(np.int32),
+                max_new_tokens=gen, sampling=SamplingParams())
+            for i, l in enumerate(lens)]
+    ecfg = EngineConfig(num_slots=slots, max_len=max_len,
+                        prompt_buckets=buckets, kv_dtype=jnp.float32)
+    row, results = run_engine(model, params, cfg, ecfg, reqs)
+    row.update(prompt_buckets=list(buckets), max_prompt_len=max(lens),
+               mean_prompt_len=float(np.mean(lens)))
+    assert row["chunked_admitted"] == len(reqs)
+    assert row["recompiled_after_warmup"] is not True
+    n = check_parity(model, params, reqs, results, max_len, 3,
+                     step_fns=make_step_fns(model))
+    row["parity_checked"] = n
+    return row
 
 
 def main():
@@ -136,12 +206,33 @@ def main():
     print(f"  int8 kv cache = {1 / ratio:.2f}x dense bytes "
           f"({ratio:.2f}x smaller)")
 
+    burst = burst_scenario(model, params, cfg, slots=args.slots,
+                           burst=2 * args.slots,
+                           plen=args.max_prompt - args.max_prompt // 4,
+                           gen=max(2, args.max_new // 3))
+    print(f"  burst {burst['burst']} same-bucket requests -> "
+          f"{burst['prefill_dispatches']} prefill dispatches "
+          f"({burst['admitted_per_dispatch']:.1f} admitted/dispatch), "
+          f"{burst['tok_per_s']:.0f} tok/s, parity {burst['parity_checked']} "
+          f"reqs, recompiled={burst['recompiled_after_warmup']}")
+
+    lp_buckets = (8, args.max_prompt // 2)
+    longp = long_prompt_scenario(model, params, cfg, slots=args.slots,
+                                 buckets=lp_buckets, max_len=max_len,
+                                 gen=max(2, args.max_new // 3))
+    print(f"  long-prompt (buckets {lp_buckets}, prompts up to "
+          f"{longp['max_prompt_len']}): {longp['chunked_admitted']} chunked "
+          f"via {longp['chunk_dispatches']} chunk dispatches, "
+          f"{longp['tok_per_s']:.0f} tok/s, parity {longp['parity_checked']} "
+          f"reqs, recompiled={longp['recompiled_after_warmup']}")
+
     out = emit_json("engine", {
         "arch": args.arch,
         "slots": args.slots, "requests": args.requests,
         "max_len": max_len,
         "mean_prompt_len": mean_p, "mean_new_tokens": mean_n,
         "dense": rows["dense"], "int8": rows["int8"],
+        "burst": burst, "long_prompt": longp,
         "kv_compression_x": ratio,
     })
     print(f"wrote {out}")

@@ -7,10 +7,13 @@ Static path (one prefill + fixed-length greedy decode, uniform batch):
       --batch 8 --prompt-len 32 --gen 32 [--ckpt results/compressed_ckpt]
 
 Engine path (slot-based continuous batching over a mixed-length trace,
-per-request sampling, optional INT8 KV cache — see docs/serving.md):
+batched same-bucket admissions, chunked prefill for prompts beyond the
+largest bucket, per-request sampling, optional INT8 KV cache — see
+docs/serving.md):
 
   PYTHONPATH=src python -m repro.launch.serve --tiny --engine continuous \
-      --requests 32 --slots 8 --gen 32 [--kv-quant] [--verify]
+      --requests 32 --slots 8 --gen 32 [--buckets 8,16] [--kv-quant] \
+      [--verify]
 
 With ``--packed`` the checkpoint is a packed QTensor checkpoint (written by
 ``repro.launch.compress --save-packed``): quantized layers stay packed
@@ -209,7 +212,10 @@ def _serve_engine(args, cfg, model, params):
     if max_len <= args.gen:
         raise SystemExit(f"[serve] --max-len {max_len} leaves no room for "
                          f"prompts at --gen {args.gen}")
+    buckets = tuple(int(b) for b in args.buckets.split(",")) \
+        if args.buckets else ()
     ecfg = EngineConfig(num_slots=args.slots, max_len=max_len,
+                        prompt_buckets=buckets,
                         kv_quantized=args.kv_quant,
                         kv_dtype=jnp.float32)
     engine = Engine(model, params, ecfg)
@@ -234,6 +240,13 @@ def _serve_engine(args, cfg, model, params):
           f"{wall:.2f}s -> {n_tok / wall:.0f} tok/s")
     print(f"[serve] latency p50 {p50 * 1e3:.1f}ms p99 {p99 * 1e3:.1f}ms, "
           f"slot utilization {engine.utilization():.2f}")
+    admit_note = (f"[serve] admissions: {engine.prefill_admitted} requests "
+                  f"via {engine.prefill_dispatches} batched prefill "
+                  f"dispatches")
+    if engine.chunked_admitted:
+        admit_note += (f", {engine.chunked_admitted} chunked prompts via "
+                       f"{engine.chunk_dispatches} chunk dispatches")
+    print(admit_note)
     print(f"[serve] kv cache resident "
           f"{engine.kv_cache_bytes() / 1e6:.2f}MB "
           f"({'int8' if args.kv_quant else 'dense'}), compiled programs "
@@ -280,6 +293,10 @@ def main():
                     help="engine: trace length (mixed-length requests)")
     ap.add_argument("--max-len", type=int, default=0,
                     help="engine: slot KV length (0 -> prompt+gen)")
+    ap.add_argument("--buckets", default="",
+                    help="engine: comma-separated prompt buckets (empty -> "
+                         "pow2 buckets covering max-len); prompts beyond "
+                         "the largest bucket stream via chunked prefill")
     ap.add_argument("--kv-quant", action="store_true",
                     help="engine: INT8 per-head-group KV cache")
     ap.add_argument("--temperature", type=float, default=0.0)

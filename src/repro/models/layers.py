@@ -269,8 +269,8 @@ def mlp_params(key, cfg, dtype=jnp.float32, d_ff: Optional[int] = None):
 
 def attn_apply(p, x, cfg, rules: ShardingRules = NO_RULES, *,
                positions=None, capture=None,
-               kv_cache=None, cache_pos=None, attn_chunk: int = 1024,
-               attn_p_dtype=jnp.float32):
+               kv_cache=None, cache_pos=None, attend_cache: bool = False,
+               attn_chunk: int = 1024, attn_p_dtype=jnp.float32):
     """Pre-norm attention block (residual added by caller).
 
     Returns (out, new_kv): new_kv is (k, v) of this call when kv_cache is
@@ -281,6 +281,16 @@ def attn_apply(p, x, cfg, rules: ShardingRules = NO_RULES, *,
     position; requires s == 1). Cache entries may be dense arrays or
     INT8 :class:`~repro.serving.kv_cache.QuantizedKV` storage — quantized
     caches quantize on write and dequantize on the attention read.
+
+    ``attend_cache=True`` is the chunked-prefill contract: for s > 1 with a
+    scalar ``cache_pos``, this chunk's K/V is written at
+    [cache_pos, cache_pos + s) first (token columns past the cache edge —
+    a final chunk's padded tail — are dropped, never shifted), then the
+    queries attend the CACHE rows under the offset causal mask
+    (key index <= cache_pos + query offset) instead of only the fresh
+    chunk, so earlier chunks of the same prompt are visible. Quantized
+    caches attend the dequantized rows, including this chunk's own
+    (quantize-rounded) keys.
     """
     b, s, d = x.shape
     hd = cfg.resolved_head_dim
@@ -314,14 +324,35 @@ def attn_apply(p, x, cfg, rules: ShardingRules = NO_RULES, *,
                 k[:, 0].astype(k_cache.dtype))
             v_cache = v_cache.at[rows, cache_pos].set(
                 v[:, 0].astype(v_cache.dtype))
+        elif attend_cache:
+            # chunked prefill: per-column scatter so a final chunk's padded
+            # tail past the cache edge is dropped, never shifted back onto
+            # live rows like dynamic_update_slice would
+            cols = cache_pos + jnp.arange(s)
+            k_cache = k_cache.at[:, cols].set(k.astype(k_cache.dtype))
+            v_cache = v_cache.at[:, cols].set(v.astype(v_cache.dtype))
         else:
             k_cache = jax.lax.dynamic_update_slice_in_dim(
                 k_cache, k.astype(k_cache.dtype), cache_pos, axis=1)
             v_cache = jax.lax.dynamic_update_slice_in_dim(
                 v_cache, v.astype(v_cache.dtype), cache_pos, axis=1)
-        if s > 1:
-            # prefill/chunked-prefill: flash attention over the new tokens
-            # (assumes cache_pos == 0 — the serving manager's convention);
+        if s > 1 and attend_cache:
+            # chunked prefill: attend the cache rows (which now include
+            # this chunk's K/V) under the offset causal mask — flash with
+            # q_offset keeps per-query numerics bit-compatible with the
+            # fresh-prefill path, so chunked greedy output matches the
+            # static path exactly on dense f32 caches
+            if isinstance(k_cache, QuantizedKV):
+                k_r = kv_dequantize(k_cache, q.dtype)
+                v_r = kv_dequantize(v_cache, q.dtype)
+            else:
+                k_r, v_r = k_cache, v_cache
+            out = flash_attention(q, k_r, v_r, causal=True,
+                                  q_offset=cache_pos, q_chunk=attn_chunk,
+                                  kv_chunk=attn_chunk, p_dtype=attn_p_dtype)
+        elif s > 1:
+            # prefill: flash attention over the new tokens (assumes
+            # cache_pos == 0 — the serving manager's convention);
             # decode_attention here would materialize (B,H,S,Smax) scores.
             out = flash_attention(q, k, v, causal=True, q_chunk=attn_chunk,
                                   kv_chunk=attn_chunk, p_dtype=attn_p_dtype)

@@ -296,11 +296,13 @@ def moe_block_params(key, cfg: ModelConfig, dtype=jnp.float32):
 
 
 def moe_block_apply(p, x, cfg, rules=NO_RULES, *, positions=None, capture=None,
-                    kv_cache=None, cache_pos=None, prefer_a2a=True,
-                    attn_chunk: int = 1024, attn_p_dtype=jnp.float32):
+                    kv_cache=None, cache_pos=None, attend_cache=False,
+                    prefer_a2a=True, attn_chunk: int = 1024,
+                    attn_p_dtype=jnp.float32):
     a, new_kv = L.attn_apply(p["attn"], x, cfg, rules, positions=positions,
                              capture=capture, kv_cache=kv_cache,
-                             cache_pos=cache_pos, attn_chunk=attn_chunk,
+                             cache_pos=cache_pos, attend_cache=attend_cache,
+                             attn_chunk=attn_chunk,
                              attn_p_dtype=attn_p_dtype)
     x = x + a
     x = x + moe_apply(p["moe"], x, cfg, rules, capture=capture,
@@ -352,7 +354,8 @@ class MoEModel(T.DenseModel):
         h, _ = jax.lax.scan(body_fn, h, params["blocks"])
         return h
 
-    def _cached_scan(self, params, h, cache, positions):
+    def _cached_scan(self, params, h, cache, positions, *,
+                     attend_cache: bool = False):
         cfg, rules = self.cfg, self.rules
         # prefill (many tokens) uses the a2a path; decode (1 token) the
         # masked-dense path (DESIGN.md §4 MoE path table)
@@ -363,6 +366,7 @@ class MoEModel(T.DenseModel):
                                             positions=positions,
                                             kv_cache=(kc, vc),
                                             cache_pos=cache["pos"],
+                                            attend_cache=attend_cache,
                                             prefer_a2a=a2a_ok,
                                             attn_chunk=self.attn_chunk,
                                             attn_p_dtype=self.attn_p_dtype)

@@ -30,11 +30,12 @@ def block_params(key, cfg: ModelConfig, dtype=jnp.float32):
 
 
 def block_apply(p, x, cfg, rules=NO_RULES, *, positions=None, capture=None,
-                kv_cache=None, cache_pos=None, attn_chunk: int = 1024,
-                attn_p_dtype=jnp.float32):
+                kv_cache=None, cache_pos=None, attend_cache: bool = False,
+                attn_chunk: int = 1024, attn_p_dtype=jnp.float32):
     a, new_kv = L.attn_apply(p["attn"], x, cfg, rules, positions=positions,
                              capture=capture, kv_cache=kv_cache,
-                             cache_pos=cache_pos, attn_chunk=attn_chunk,
+                             cache_pos=cache_pos, attend_cache=attend_cache,
+                             attn_chunk=attn_chunk,
                              attn_p_dtype=attn_p_dtype)
     x = x + a
     x = x + L.mlp_apply(p["mlp"], x, cfg, rules, capture=capture)
@@ -181,7 +182,8 @@ class DenseModel:
                 "v": (None, "batch", "seq_kv", None, None),
                 "pos": ()}
 
-    def _cached_scan(self, params, h, cache, positions):
+    def _cached_scan(self, params, h, cache, positions, *,
+                     attend_cache: bool = False):
         cfg, rules = self.cfg, self.rules
         def body(x, scanned):
             layer_p, kc, vc = scanned
@@ -189,6 +191,7 @@ class DenseModel:
                                         positions=positions,
                                         kv_cache=(kc, vc),
                                         cache_pos=cache["pos"],
+                                        attend_cache=attend_cache,
                                         attn_chunk=self.attn_chunk,
                                         attn_p_dtype=self.attn_p_dtype)
             return y, (kc2, vc2)
@@ -237,6 +240,32 @@ class DenseModel:
         positions = (jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
                      + self._base_positions(cache["pos"]))
         h, cache = self._cached_scan(params, h, cache, positions)
+        idx = jnp.clip(lengths - 1, 0, s - 1)
+        h_last = jnp.take_along_axis(h, idx[:, None, None], axis=1)  # (B,1,d)
+        h_last = L.rmsnorm(h_last, params["final_norm"], self.cfg.norm_eps)
+        return self._mask_pad(L.linear_apply(self._head_w(params), h_last)), cache
+
+    def prefill_chunk(self, params, batch, cache, lengths):
+        """One fixed-width chunk of a longer prompt against a cache that
+        already holds the earlier chunks' K/V below ``cache["pos"]``.
+
+        The chunked-prefill contract (the engine's long-prompt path): this
+        chunk's K/V is written at [pos, pos + W) of the cache rows, and —
+        unlike :meth:`prefill_at` — the queries ATTEND THE CACHE under the
+        offset causal mask (key index <= each query's absolute position),
+        so earlier chunks of the same prompt are visible and a prompt of
+        any length streams through one bucket-width program. Logits are
+        gathered at the chunk-local ``lengths - 1`` — meaningful only on
+        the final (right-padded) chunk; callers discard earlier chunks'
+        samples. A final chunk's padded tail past the cache edge is
+        dropped, never written onto live rows.
+        """
+        h = self.embed(params, batch)
+        b, s = h.shape[0], h.shape[1]
+        positions = (jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+                     + self._base_positions(cache["pos"]))
+        h, cache = self._cached_scan(params, h, cache, positions,
+                                     attend_cache=True)
         idx = jnp.clip(lengths - 1, 0, s - 1)
         h_last = jnp.take_along_axis(h, idx[:, None, None], axis=1)  # (B,1,d)
         h_last = L.rmsnorm(h_last, params["final_norm"], self.cfg.norm_eps)

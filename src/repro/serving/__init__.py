@@ -9,12 +9,13 @@ cycle.
 """
 from repro.serving.kv_cache import (KVCacheConfig, QuantizedKV, cache_bytes,
                                     init_slot_cache, kv_dequantize,
-                                    kv_quantize, kv_update, write_slot)
+                                    kv_quantize, kv_update, set_slot_rows,
+                                    slot_rows, write_slot)
 from repro.serving.sampling import SamplingParams, sample_tokens
-from repro.serving.scheduler import (GenerationRequest, GenerationResult,
-                                     Scheduler)
+from repro.serving.scheduler import (AdmittedBatch, GenerationRequest,
+                                     GenerationResult, Scheduler)
 
-_LAZY = ("Engine", "EngineConfig")
+_LAZY = ("Engine", "EngineConfig", "batch_buckets")
 
 
 def __getattr__(name):
@@ -24,7 +25,8 @@ def __getattr__(name):
     raise AttributeError(name)
 
 
-__all__ = ["Engine", "EngineConfig", "GenerationRequest", "GenerationResult",
-           "KVCacheConfig", "QuantizedKV", "SamplingParams", "Scheduler",
-           "cache_bytes", "init_slot_cache", "kv_dequantize", "kv_quantize",
-           "kv_update", "sample_tokens", "write_slot"]
+__all__ = ["AdmittedBatch", "Engine", "EngineConfig", "GenerationRequest",
+           "GenerationResult", "KVCacheConfig", "QuantizedKV",
+           "SamplingParams", "Scheduler", "batch_buckets", "cache_bytes",
+           "init_slot_cache", "kv_dequantize", "kv_quantize", "kv_update",
+           "sample_tokens", "set_slot_rows", "slot_rows", "write_slot"]

@@ -2,27 +2,37 @@
 device slots, no recompilation after warmup.
 
 The engine owns a slot-indexed KV cache (``serving/kv_cache.py``; S slots ×
-max_len tokens, dense or INT8 per-head-group quantized) and two jitted step
-functions:
+max_len tokens, dense or INT8 per-head-group quantized) and three jitted
+step functions:
 
-- **prefill** (one compile per prompt bucket): runs the model over one
-  request's right-padded prompt against a fresh (L, 1, W) mini-cache,
-  gathers logits at the true last token, samples the first output token on
-  device, and splices the mini-cache into the admitted slot's rows
-  (quantizing if the cache is INT8);
+- **prefill** (one compile per (prompt bucket, batch bucket) pair): runs
+  the model over a whole same-bucket admission batch of right-padded
+  prompts against a fresh (L, B, W) mini-cache, gathers logits at each
+  row's true last token, samples the first output tokens on device, and
+  splices the B mini-caches into the admitted slots' rows in ONE dispatch
+  (``write_slot``; batch sizes round up to pow2 batch buckets, padding
+  rows carry slot == num_slots so their writes are dropped);
+- **chunk** (one compile, ever): one bucket-width chunk of a prompt LONGER
+  than the largest bucket, run against the slot's own cache rows — the
+  chunk's K/V is written at [start, start+W) and attention reads the cache
+  under the offset causal mask (``model.prefill_chunk``), so max_len-scale
+  prompts serve without a max_len-wide compile;
 - **decode** (one compile, ever): one token for ALL slots at once — each
   slot reads/writes the cache at its own position (``pos`` is a vector),
   per-slot sampling params ride along as arrays, and exactly one int32 per
   slot crosses the device boundary per step.
 
 The host-side :class:`~repro.serving.scheduler.Scheduler` feeds it: FIFO
-admission onto the slot free-list, prompt-length bucketing (the only shape
-degree of freedom), retire-on-completion. Retired slots keep decoding
-garbage at position 0 until reused — their writes land below the next
-request's prefill splice and are never attended.
+admission onto the slot free-list (``admit_batch`` groups the FIFO head-run
+by prompt bucket so a burst of B same-bucket arrivals costs one device call
+instead of B), prompt-length bucketing (the only shape degree of freedom
+besides the batch bucket), retire-on-completion. Retired slots keep
+decoding garbage at position 0 until reused — their writes land below the
+next request's prefill splice and are never attended.
 
 `launch/serve.py --engine continuous` drives it; `benchmarks/engine_bench.py`
-load-tests it (Zipf lengths) into ``results/BENCH_engine.json``.
+load-tests it (Zipf, burst, and long-prompt traces) into
+``results/BENCH_engine.json``.
 """
 from __future__ import annotations
 
@@ -35,17 +45,20 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.serving.kv_cache import (KVCacheConfig, cache_bytes,
-                                    init_slot_cache, write_slot)
+                                    init_slot_cache, set_slot_rows,
+                                    slot_rows, write_slot)
 from repro.serving.sampling import sample_tokens
-from repro.serving.scheduler import (GenerationRequest, GenerationResult,
-                                     Scheduler)
+from repro.serving.scheduler import (AdmittedBatch, GenerationRequest,
+                                     GenerationResult, Scheduler)
 
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
     """Engine shape/storage policy. ``kv_quantized`` switches the slot
     cache to INT8 per-head-group storage (``kv_group_size=0`` → one group
-    per head); ``prompt_buckets=()`` → power-of-two buckets."""
+    per head); ``prompt_buckets=()`` → power-of-two buckets covering
+    max_len. A custom ``prompt_buckets`` whose largest bucket is smaller
+    than max_len turns prompts beyond it into chunked prefills."""
     num_slots: int = 8
     max_len: int = 256
     prompt_buckets: tuple = ()
@@ -53,6 +66,16 @@ class EngineConfig:
     kv_quantized: bool = False
     kv_group_size: int = 0
     max_top_k: int = 64
+
+
+def batch_buckets(num_slots: int) -> tuple:
+    """Power-of-two prefill batch buckets 1, 2, … covering num_slots."""
+    out, b = [], 1
+    while b < num_slots:
+        out.append(b)
+        b *= 2
+    out.append(b)
+    return tuple(out)
 
 
 class Engine:
@@ -67,6 +90,7 @@ class Engine:
         self.model, self.params, self.cfg = model, params, cfg
         self.scheduler = Scheduler(cfg.num_slots, cfg.max_len,
                                    cfg.prompt_buckets)
+        self.batch_buckets = batch_buckets(cfg.num_slots)
         kv_cfg = KVCacheConfig(num_slots=cfg.num_slots, max_len=cfg.max_len,
                                dtype=cfg.kv_dtype, quantized=cfg.kv_quantized,
                                group_size=cfg.kv_group_size)
@@ -81,9 +105,16 @@ class Engine:
         self._steps = np.zeros(s, np.uint32)
         self._results: Dict[int, GenerationResult] = {}
         self._done: List[GenerationResult] = []
+        self._reset_counters()
+        self._prefill, self._chunk, self._decode = self._make_step_fns()
+
+    def _reset_counters(self) -> None:
         self.decode_steps = 0
         self.active_slot_steps = 0
-        self._prefill, self._decode = self._make_step_fns()
+        self.prefill_dispatches = 0     # batched-prefill device calls
+        self.prefill_admitted = 0       # requests admitted via those calls
+        self.chunk_dispatches = 0       # chunked-prefill device calls
+        self.chunked_admitted = 0       # requests admitted via chunking
 
     # -- jitted steps ------------------------------------------------------
     def _make_step_fns(self):
@@ -91,17 +122,31 @@ class Engine:
         mcfg = model.cfg
         mini_dtype = jnp.float32 if cfg.kv_quantized else cfg.kv_dtype
 
-        def prefill_fn(params, kv, tokens, length, slot, temp, topk, seed):
-            w = tokens.shape[1]
-            zeros = jnp.zeros((mcfg.num_layers, 1, w, mcfg.num_kv_heads,
+        def prefill_fn(params, kv, tokens, lengths, slots, temps, topks,
+                       seeds):
+            b, w = tokens.shape
+            zeros = jnp.zeros((mcfg.num_layers, b, w, mcfg.num_kv_heads,
                                mcfg.resolved_head_dim), mini_dtype)
             mini = {"k": zeros, "v": zeros, "pos": jnp.zeros((), jnp.int32)}
             logits, mini = model.prefill_at(params, {"tokens": tokens},
-                                            mini, lengths=length[None])
+                                            mini, lengths=lengths)
+            toks = sample_tokens(logits[:, 0, :], temps, topks, seeds,
+                                 jnp.zeros((b,), jnp.uint32),
+                                 max_top_k=cfg.max_top_k)
+            kv = write_slot(kv, slots, mini["k"], mini["v"])
+            return toks, kv
+
+        def chunk_fn(params, kv, tokens, start, length, slot, temp, topk,
+                     seed):
+            row = {"k": slot_rows(kv["k"], slot),
+                   "v": slot_rows(kv["v"], slot), "pos": start}
+            logits, row = model.prefill_chunk(params, {"tokens": tokens},
+                                              row, lengths=length[None])
             tok = sample_tokens(logits[:, 0, :], temp[None], topk[None],
                                 seed[None], jnp.zeros((1,), jnp.uint32),
                                 max_top_k=cfg.max_top_k)
-            kv = write_slot(kv, slot, mini["k"], mini["v"])
+            kv = {"k": set_slot_rows(kv["k"], slot, row["k"]),
+                  "v": set_slot_rows(kv["v"], slot, row["v"])}
             return tok[0], kv
 
         def decode_fn(params, kv, pos, tokens, temps, topks, seeds, steps):
@@ -112,6 +157,7 @@ class Engine:
             return tok, {"k": cache["k"], "v": cache["v"]}
 
         return (jax.jit(prefill_fn, donate_argnums=1),
+                jax.jit(chunk_fn, donate_argnums=1),
                 jax.jit(decode_fn, donate_argnums=1))
 
     # -- request API -------------------------------------------------------
@@ -122,60 +168,91 @@ class Engine:
             t_enqueue=time.perf_counter())
 
     def warmup(self, reqs) -> Dict[str, int]:
-        """Compile every prompt bucket's prefill program plus the decode
-        program before timing starts: one short clone per distinct bucket
-        in ``reqs`` (budget clipped so the clone always fits max_len), and
-        a minimal 2-token request if none of the clones had room to decode.
-        Uses negative rids (callers' traces use non-negative ones); returns
-        the post-warmup :meth:`compile_counts` snapshot."""
-        seen = {}
+        """Compile every program a trace shaped like ``reqs`` can hit
+        before timing starts:
+
+        - for each distinct prompt bucket in ``reqs``, the full
+          (bucket × batch-bucket) prefill grid, traced with all-padding
+          dummy batches (slot index == num_slots, so every cache write is
+          dropped);
+        - the chunked-prefill program (one dummy chunk) if any request's
+          prompt exceeds the largest bucket;
+        - the decode program, via one short clone per distinct bucket
+          (prompt clipped to max_len - 1 so the clone's >= 1-token budget
+          always fits) plus a minimal 2-token fallback request if none of
+          the clones had decode headroom.
+
+        Warmup requires an IDLE engine: it drains the scheduler, so real
+        requests submitted beforehand would be silently executed and their
+        results discarded — it raises instead. Clones use negative rids
+        (callers' traces use non-negative ones) and are filtered from the
+        caller-visible results explicitly. Resets the dispatch/utilization
+        counters and returns the post-warmup :meth:`compile_counts`
+        snapshot."""
+        if not self.scheduler.idle:
+            raise RuntimeError(
+                "Engine.warmup on a non-idle engine: warmup drains the "
+                "scheduler, which would silently execute and discard "
+                "already-submitted requests — warm up first, then submit")
+        wmax = self.scheduler.buckets[-1]
+        seen: Dict[int, GenerationRequest] = {}
+        chunked = False
         for r in reqs:
-            seen.setdefault(self.scheduler.bucket_for(r.prompt_len), r)
+            if r.prompt_len > wmax:
+                chunked = True
+            else:
+                seen.setdefault(self.scheduler.bucket_for(r.prompt_len), r)
+
+        # (bucket × batch-bucket) prefill grid: all-padding dummy batches
+        drop = self.cfg.num_slots                  # OOB slot ⇒ writes dropped
+        for w in sorted(seen):
+            for bb in self.batch_buckets:
+                tok_dev, self.kv = self._prefill(
+                    self.params, self.kv,
+                    jnp.zeros((bb, w), jnp.int32),
+                    jnp.ones((bb,), jnp.int32),
+                    jnp.full((bb,), drop, jnp.int32),
+                    jnp.zeros((bb,), jnp.float32),
+                    jnp.zeros((bb,), jnp.int32),
+                    jnp.zeros((bb,), jnp.uint32))
+        if chunked:
+            # one dummy chunk compiles the (single) chunk program; the
+            # garbage it writes into slot 0 sits beyond every causal mask
+            # until the slot's next prefill overwrites it (engine is idle)
+            tok_dev, self.kv = self._chunk(
+                self.params, self.kv, jnp.zeros((1, wmax), jnp.int32),
+                np.int32(0), np.int32(1), np.int32(0), np.float32(0.0),
+                np.int32(0), np.uint32(0))
+
+        # end-to-end clones (decode program + host bookkeeping paths)
         wid = -1
         decode_warmed = False
         for _, r in sorted(seen.items()):
-            nnew = min(2, self.cfg.max_len - r.prompt_len)
+            plen = min(r.prompt_len, self.cfg.max_len - 1)
+            nnew = min(2, self.cfg.max_len - plen)     # >= 1 by construction
             decode_warmed |= nnew >= 2
-            self.submit(GenerationRequest(rid=wid, prompt=r.prompt,
+            self.submit(GenerationRequest(rid=wid, prompt=r.prompt[:plen],
                                           max_new_tokens=nnew,
                                           sampling=r.sampling))
             wid -= 1
-        if seen and not decode_warmed:
+        if (seen or chunked) and not decode_warmed:
             self.submit(GenerationRequest(
                 rid=wid, prompt=np.asarray([1], np.int32), max_new_tokens=2))
-        self.run()
+        real = [r for r in self.run() if r.rid >= 0]
+        self._done.extend(real)        # unreachable under the idle guard
+        self._reset_counters()
         return self.compile_counts()
 
     def step(self) -> None:
-        """Admit every admissible request (one bucketed prefill each), then
-        run one decode step for all slots."""
+        """Admit every admissible request (one batched prefill dispatch per
+        same-bucket FIFO head-run, chunked prefill for beyond-largest-bucket
+        prompts), then run one decode step for all slots."""
         sched = self.scheduler
-        while (adm := sched.admit()) is not None:
-            slot, req = adm
-            w = sched.bucket_for(req.prompt_len)
-            padded = np.zeros((1, w), np.int32)
-            padded[0, :req.prompt_len] = req.prompt
-            sp = req.sampling
-            tok_dev, self.kv = self._prefill(
-                self.params, self.kv, jnp.asarray(padded),
-                np.int32(req.prompt_len), np.int32(slot),
-                np.float32(sp.temperature), np.int32(sp.top_k),
-                np.uint32(sp.seed))
-            tok = int(tok_dev)
-            now = time.perf_counter()
-            res = self._results[req.rid]
-            res.t_first_token = now
-            res.tokens.append(tok)
-            state = sched.slots[slot]
-            state.generated = 1
-            self._pos[slot] = req.prompt_len
-            self._tok[slot] = tok
-            self._temps[slot] = sp.temperature
-            self._topks[slot] = sp.top_k
-            self._seeds[slot] = np.uint32(sp.seed)
-            self._steps[slot] = 1
-            if state.done or tok == req.eos_id:
-                self._finish(slot, now)
+        while (batch := sched.admit_batch()) is not None:
+            if batch.chunked:
+                self._run_chunked(*batch.items[0])
+            else:
+                self._run_prefill_batch(batch)
 
         if sched.num_active == 0:
             return
@@ -198,6 +275,72 @@ class Engine:
             self._steps[slot] += 1
             if state.done or tok == state.request.eos_id:
                 self._finish(slot, now)
+
+    def _run_prefill_batch(self, batch: AdmittedBatch) -> None:
+        """One device dispatch for a whole same-bucket admission batch."""
+        b, w = len(batch.items), batch.bucket
+        bb = next(x for x in self.batch_buckets if b <= x)
+        tokens = np.zeros((bb, w), np.int32)
+        lengths = np.ones((bb,), np.int32)
+        slots = np.full((bb,), self.cfg.num_slots, np.int32)  # pad: dropped
+        temps = np.zeros((bb,), np.float32)
+        topks = np.zeros((bb,), np.int32)
+        seeds = np.zeros((bb,), np.uint32)
+        for i, (slot, req) in enumerate(batch.items):
+            tokens[i, :req.prompt_len] = req.prompt
+            lengths[i] = req.prompt_len
+            slots[i] = slot
+            sp = req.sampling
+            temps[i], topks[i] = sp.temperature, sp.top_k
+            seeds[i] = np.uint32(sp.seed)
+        tok_dev, self.kv = self._prefill(
+            self.params, self.kv, jnp.asarray(tokens), jnp.asarray(lengths),
+            jnp.asarray(slots), jnp.asarray(temps), jnp.asarray(topks),
+            jnp.asarray(seeds))
+        toks = np.asarray(tok_dev)            # B first tokens, one transfer
+        self.prefill_dispatches += 1
+        self.prefill_admitted += b
+        now = time.perf_counter()
+        for i, (slot, req) in enumerate(batch.items):
+            self._record_first_token(slot, req, int(toks[i]), now)
+
+    def _run_chunked(self, slot: int, req: GenerationRequest) -> None:
+        """Stream a beyond-largest-bucket prompt through the bucket-width
+        chunk program against the slot's own cache rows. Only the final
+        chunk's sample is real; intermediate device results are never
+        synced."""
+        w = self.scheduler.buckets[-1]
+        p, sp = req.prompt_len, req.sampling
+        tok_dev = None
+        for start in range(0, p, w):
+            clen = min(w, p - start)
+            chunk = np.zeros((1, w), np.int32)
+            chunk[0, :clen] = req.prompt[start:start + clen]
+            tok_dev, self.kv = self._chunk(
+                self.params, self.kv, jnp.asarray(chunk), np.int32(start),
+                np.int32(clen), np.int32(slot), np.float32(sp.temperature),
+                np.int32(sp.top_k), np.uint32(sp.seed))
+            self.chunk_dispatches += 1
+        self.chunked_admitted += 1
+        self._record_first_token(slot, req, int(tok_dev),
+                                 time.perf_counter())
+
+    def _record_first_token(self, slot: int, req: GenerationRequest,
+                            tok: int, now: float) -> None:
+        res = self._results[req.rid]
+        res.t_first_token = now
+        res.tokens.append(tok)
+        state = self.scheduler.slots[slot]
+        state.generated = 1
+        sp = req.sampling
+        self._pos[slot] = req.prompt_len
+        self._tok[slot] = tok
+        self._temps[slot] = sp.temperature
+        self._topks[slot] = sp.top_k
+        self._seeds[slot] = np.uint32(sp.seed)
+        self._steps[slot] = 1
+        if state.done or tok == req.eos_id:
+            self._finish(slot, now)
 
     def _finish(self, slot: int, now: float) -> None:
         req = self.scheduler.retire(slot)
@@ -226,17 +369,19 @@ class Engine:
 
     # -- introspection -----------------------------------------------------
     def compile_counts(self) -> Dict[str, Optional[int]]:
-        """Compiled-program counts (prefill: one per prompt bucket seen;
-        decode: 1). Flat across a post-warmup trace ⇔ no recompilation.
-        ``None`` when the jit cache size is unavailable (private jax API
-        moved) — callers must treat that as UNKNOWN, never as "no
-        recompilation"."""
+        """Compiled-program counts (prefill: one per (prompt bucket, batch
+        bucket) pair seen; chunk: 1 when the trace has beyond-largest-bucket
+        prompts; decode: 1). Flat across a post-warmup trace ⇔ no
+        recompilation. ``None`` when the jit cache size is unavailable
+        (private jax API moved) — callers must treat that as UNKNOWN, never
+        as "no recompilation"."""
         def size(f) -> Optional[int]:
             try:
                 return int(f._cache_size())
             except Exception:
                 return None
-        return {"prefill": size(self._prefill), "decode": size(self._decode)}
+        return {"prefill": size(self._prefill), "chunk": size(self._chunk),
+                "decode": size(self._decode)}
 
     def kv_cache_bytes(self) -> int:
         return cache_bytes(self.kv)
@@ -248,4 +393,5 @@ class Engine:
                                          * self.cfg.num_slots)
 
 
-__all__ = ["Engine", "EngineConfig", "GenerationRequest", "GenerationResult"]
+__all__ = ["Engine", "EngineConfig", "GenerationRequest", "GenerationResult",
+           "batch_buckets"]

@@ -18,7 +18,9 @@ same ``repro.quant.matmul_impl`` switch as the weight kernels.
 
 Writes quantize the incoming k/v: per-slot decode writes scatter one token
 at each slot's own position (``pos`` is a vector — the engine convention),
-prefill writes splice a whole slot row (:func:`write_slot`).
+prefill writes splice a whole batch of slot rows in one dispatch
+(:func:`write_slot`), and the chunked prefill works on one slot's rows via
+:func:`slot_rows` / :func:`set_slot_rows`.
 """
 from __future__ import annotations
 
@@ -113,8 +115,12 @@ def kv_update(q: QuantizedKV, x: jax.Array, pos) -> QuantizedKV:
     """Write new tokens x (B, s, Hk, D) into the (B, T, Hk, D) storage.
 
     ``pos`` scalar → splice s tokens at a uniform position (the static
-    serving path); ``pos`` vector (B,) → scatter one token per row at that
-    row's own position (the engine decode path, s == 1)."""
+    serving path and the chunked prefill); ``pos`` vector (B,) → scatter
+    one token per row at that row's own position (the engine decode path,
+    s == 1). Scalar splices scatter per token column with drop semantics:
+    columns past the cache edge (a final prefill chunk's padded tail) are
+    dropped instead of shifting the write like ``dynamic_update_slice``
+    would."""
     new = kv_quantize(x, q.group_size)
     if getattr(pos, "ndim", 0) == 1:
         assert x.shape[1] == 1, "per-slot writes are one token per step"
@@ -125,10 +131,11 @@ def kv_update(q: QuantizedKV, x: jax.Array, pos) -> QuantizedKV:
             q.scale.at[idx, pos].set(new.scale[:, 0]),
             q.zero.at[idx, pos].set(new.zero[:, 0]),
             q.group_size)
+    cols = pos + jnp.arange(x.shape[1])
     return QuantizedKV(
-        jax.lax.dynamic_update_slice_in_dim(q.codes, new.codes, pos, axis=1),
-        jax.lax.dynamic_update_slice_in_dim(q.scale, new.scale, pos, axis=1),
-        jax.lax.dynamic_update_slice_in_dim(q.zero, new.zero, pos, axis=1),
+        q.codes.at[:, cols].set(new.codes),
+        q.scale.at[:, cols].set(new.scale),
+        q.zero.at[:, cols].set(new.zero),
         q.group_size)
 
 
@@ -170,32 +177,61 @@ def init_slot_cache(model_cfg, cfg: KVCacheConfig) -> dict:
     return {"k": k, "v": v, "pos": jnp.zeros((cfg.num_slots,), jnp.int32)}
 
 
-def write_slot(cache: dict, slot, k_new: jax.Array, v_new: jax.Array) -> dict:
-    """Splice a freshly prefilled slot row into the big cache.
+def write_slot(cache: dict, slots, k_new: jax.Array, v_new: jax.Array) -> dict:
+    """Splice B freshly prefilled slot rows into the big cache in one
+    dispatch.
 
-    ``k_new``/``v_new``: (L, 1, W, Hk, D) dense floats (the prefill
-    mini-cache); written at [:, slot, :W]. W beyond max_len is clipped —
-    padded bucket tails past the cache end never hold live tokens."""
+    ``slots``: (B,) int32 slot indices (a scalar is treated as B == 1);
+    ``k_new``/``v_new``: (L, B, W, Hk, D) dense floats (the batched prefill
+    mini-caches), written at [:, slots[b], :W]. The scatter drops rows
+    whose slot index is out of range — the batch-bucket padding convention
+    (padding rows carry slot == num_slots) — and any token column past the
+    cache edge, so padded bucket tails never hold live tokens."""
     out = dict(cache)
+    slots = jnp.atleast_1d(jnp.asarray(slots, jnp.int32))
     for name, new in (("k", k_new), ("v", v_new)):
         entry = cache[name]
-        t = (entry.codes if isinstance(entry, QuantizedKV) else entry).shape[2]
-        new = new[:, :, :min(new.shape[2], t)]
+        idx_s = slots[:, None]                      # (B, 1)
+        idx_t = jnp.arange(new.shape[2])[None, :]   # (1, W)
         if isinstance(entry, QuantizedKV):
             q = kv_quantize(new, entry.group_size)
             entry = QuantizedKV(
-                jax.lax.dynamic_update_slice(
-                    entry.codes, q.codes, (0, slot, 0, 0, 0)),
-                jax.lax.dynamic_update_slice(
-                    entry.scale, q.scale, (0, slot, 0, 0, 0)),
-                jax.lax.dynamic_update_slice(
-                    entry.zero, q.zero, (0, slot, 0, 0, 0)),
+                entry.codes.at[:, idx_s, idx_t].set(q.codes),
+                entry.scale.at[:, idx_s, idx_t].set(q.scale),
+                entry.zero.at[:, idx_s, idx_t].set(q.zero),
                 entry.group_size)
         else:
-            entry = jax.lax.dynamic_update_slice(
-                entry, new.astype(entry.dtype), (0, slot, 0, 0, 0))
+            entry = entry.at[:, idx_s, idx_t].set(new.astype(entry.dtype))
         out[name] = entry
     return out
+
+
+def slot_rows(entry, slot):
+    """One slot's (L, 1, T, Hk, D) rows of the (L, S, T, Hk, D) storage
+    (dense or :class:`QuantizedKV`) — the chunked prefill's working view."""
+    if isinstance(entry, QuantizedKV):
+        return QuantizedKV(
+            jax.lax.dynamic_slice_in_dim(entry.codes, slot, 1, axis=1),
+            jax.lax.dynamic_slice_in_dim(entry.scale, slot, 1, axis=1),
+            jax.lax.dynamic_slice_in_dim(entry.zero, slot, 1, axis=1),
+            entry.group_size)
+    return jax.lax.dynamic_slice_in_dim(entry, slot, 1, axis=1)
+
+
+def set_slot_rows(entry, slot, rows):
+    """Write a (L, 1, T, Hk, D) slot row (from :func:`slot_rows`) back into
+    the (L, S, T, Hk, D) storage."""
+    if isinstance(entry, QuantizedKV):
+        return QuantizedKV(
+            jax.lax.dynamic_update_slice_in_dim(
+                entry.codes, rows.codes, slot, axis=1),
+            jax.lax.dynamic_update_slice_in_dim(
+                entry.scale, rows.scale, slot, axis=1),
+            jax.lax.dynamic_update_slice_in_dim(
+                entry.zero, rows.zero, slot, axis=1),
+            entry.group_size)
+    return jax.lax.dynamic_update_slice_in_dim(
+        entry, rows.astype(entry.dtype), slot, axis=1)
 
 
 def cache_bytes(cache: dict) -> int:
@@ -211,4 +247,5 @@ def cache_bytes(cache: dict) -> int:
 
 
 __all__ = ["QuantizedKV", "KVCacheConfig", "init_slot_cache", "write_slot",
-           "cache_bytes", "kv_quantize", "kv_dequantize", "kv_update"]
+           "slot_rows", "set_slot_rows", "cache_bytes", "kv_quantize",
+           "kv_dequantize", "kv_update"]

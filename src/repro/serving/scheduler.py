@@ -7,10 +7,14 @@ compiled shapes goes through :func:`Scheduler.bucket_for` (prompt-length
 bucketing), so the step functions compile once per bucket and never again.
 
 Invariants (tested in tests/test_engine.py):
-- admission is FIFO: requests start in submit order;
+- admission is FIFO: requests start in submit order (``admit_batch`` pops
+  the longest head-run sharing one prompt bucket — it never skips over a
+  request whose bucket differs);
 - a slot is EXCLUSIVE: never two live requests on one slot;
 - retire frees the slot for reuse within the same run;
-- a request is admitted only if prompt_len + max_new_tokens fits max_len.
+- a request is admitted only if prompt_len + max_new_tokens fits max_len
+  and it decodes at least one token (max_new_tokens >= 1);
+- a prompt longer than the largest bucket admits alone (chunked prefill).
 """
 from __future__ import annotations
 
@@ -71,6 +75,19 @@ class SlotState:
         return self.generated >= self.request.max_new_tokens
 
 
+@dataclasses.dataclass
+class AdmittedBatch:
+    """One admission group. ``chunked=False``: the FIFO head-run sharing
+    one prompt ``bucket``, admitted together — one batched prefill dispatch
+    covers every ``(slot, request)`` in ``items``. ``chunked=True``: a
+    single request whose prompt exceeds the largest bucket; it streams
+    through the bucket-width chunked-prefill program (``bucket`` is the
+    chunk width, i.e. the largest bucket)."""
+    bucket: int
+    items: List[tuple]                 # [(slot, request), ...]
+    chunked: bool = False
+
+
 def default_buckets(max_len: int) -> tuple:
     """Power-of-two prompt buckets 8, 16, … covering max_len."""
     out, b = [], 8
@@ -89,22 +106,33 @@ class Scheduler:
         self.num_slots = num_slots
         self.max_len = max_len
         self.buckets = tuple(sorted(prompt_buckets)) or default_buckets(max_len)
+        if self.buckets[0] < 1:
+            raise ValueError(f"prompt buckets must be >= 1, got {self.buckets}")
+        if self.buckets[-1] > max_len:
+            # a bucket wider than the cache would silently clip live prompt
+            # tokens at the cache edge during the prefill splice
+            raise ValueError(
+                f"largest prompt bucket {self.buckets[-1]} exceeds max_len "
+                f"{max_len}: the bucket-padded prefill would write past the "
+                f"slot cache edge")
         self.queue: Deque[GenerationRequest] = deque()
         self.free: Deque[int] = deque(range(num_slots))
         self.slots: List[Optional[SlotState]] = [None] * num_slots
 
     # -- admission ---------------------------------------------------------
     def submit(self, req: GenerationRequest) -> None:
+        if req.max_new_tokens < 1:
+            raise ValueError(
+                f"request {req.rid}: max_new_tokens {req.max_new_tokens} < 1 "
+                f"(every admitted request emits at least one token)")
         if req.prompt_len + req.max_new_tokens > self.max_len:
             raise ValueError(
                 f"request {req.rid}: prompt {req.prompt_len} + "
                 f"max_new {req.max_new_tokens} exceeds max_len {self.max_len}")
-        if req.prompt_len > self.buckets[-1]:
-            raise ValueError(
-                f"request {req.rid}: prompt {req.prompt_len} exceeds the "
-                f"largest prompt bucket {self.buckets[-1]}")
         if req.prompt_len < 1:
             raise ValueError(f"request {req.rid}: empty prompt")
+        # prompts beyond the largest bucket are fine: they admit alone and
+        # stream through the chunked prefill (see admit_batch)
         self.queue.append(req)
 
     def admit(self) -> Optional[tuple]:
@@ -116,6 +144,29 @@ class Scheduler:
         assert self.slots[slot] is None, f"slot {slot} double-booked"
         self.slots[slot] = SlotState(request=req)
         return slot, req
+
+    def admit_batch(self) -> Optional[AdmittedBatch]:
+        """Pop the longest FIFO head-run sharing one prompt bucket onto
+        free slots — one batched prefill dispatch admits the whole run.
+
+        A prompt beyond the largest bucket admits alone (``chunked=True``):
+        it streams through the bucket-width program chunk by chunk. FIFO
+        order is preserved strictly — the run stops at the first queued
+        request whose bucket differs (never skips over it) or when the
+        free-list empties. Returns None when nothing is admissible."""
+        if not self.queue or not self.free:
+            return None
+        wmax = self.buckets[-1]
+        if self.queue[0].prompt_len > wmax:
+            return AdmittedBatch(bucket=wmax, items=[self.admit()],
+                                 chunked=True)
+        bucket = self.bucket_for(self.queue[0].prompt_len)
+        items = []
+        while (self.queue and self.free
+               and self.queue[0].prompt_len <= wmax
+               and self.bucket_for(self.queue[0].prompt_len) == bucket):
+            items.append(self.admit())
+        return AdmittedBatch(bucket=bucket, items=items)
 
     def retire(self, slot: int) -> GenerationRequest:
         state = self.slots[slot]
@@ -129,8 +180,8 @@ class Scheduler:
         for b in self.buckets:
             if prompt_len <= b:
                 return b
-        # unreachable for admitted requests: submit() rejects prompts
-        # beyond the largest bucket
+        # beyond the largest bucket: the request is chunked — the largest
+        # bucket is the chunk width it streams through
         return self.buckets[-1]
 
     @property
@@ -145,5 +196,5 @@ class Scheduler:
         return not self.queue and self.num_active == 0
 
 
-__all__ = ["GenerationRequest", "GenerationResult", "SlotState", "Scheduler",
-           "default_buckets"]
+__all__ = ["AdmittedBatch", "GenerationRequest", "GenerationResult",
+           "SlotState", "Scheduler", "default_buckets"]

@@ -70,7 +70,7 @@ def test_scheduler_fifo_admission_and_slot_reuse():
     assert s.admit() is None and len(s.queue) == 0
 
 
-def test_scheduler_rejects_oversized_and_empty_requests():
+def test_scheduler_rejects_oversized_empty_and_zero_budget_requests():
     s = Scheduler(num_slots=1, max_len=16)
     with pytest.raises(ValueError):
         s.submit(GenerationRequest(rid=0, prompt=np.zeros(10, np.int32),
@@ -78,6 +78,11 @@ def test_scheduler_rejects_oversized_and_empty_requests():
     with pytest.raises(ValueError):
         s.submit(GenerationRequest(rid=1, prompt=np.zeros(0, np.int32),
                                    max_new_tokens=4))
+    # a max_new_tokens=0 request would still emit one token (prefill
+    # samples unconditionally) — rejected at submit time
+    with pytest.raises(ValueError):
+        s.submit(GenerationRequest(rid=2, prompt=np.ones(4, np.int32),
+                                   max_new_tokens=0))
 
 
 def test_prompt_bucketing():
@@ -88,11 +93,38 @@ def test_prompt_bucketing():
     assert s.bucket_for(9) == 16 and s.bucket_for(33) == 48
     s2 = Scheduler(num_slots=1, max_len=64, prompt_buckets=(12, 24))
     assert s2.bucket_for(5) == 12 and s2.bucket_for(13) == 24
-    # prompts beyond the largest bucket are rejected at submit time (the
-    # bucketed prefill pad could not hold them)
+    # beyond the largest bucket: admitted (chunked prefill at the largest
+    # bucket's width), no longer rejected
+    s2.submit(GenerationRequest(rid=9, prompt=np.zeros(30, np.int32),
+                                max_new_tokens=4))
+    assert s2.bucket_for(30) == 24
+    batch = s2.admit_batch()
+    assert batch.chunked and batch.bucket == 24
+    assert [r.rid for _, r in batch.items] == [9]
+    # a bucket wider than max_len would silently clip live prompt tokens at
+    # the cache edge — rejected at construction instead
     with pytest.raises(ValueError):
-        s2.submit(GenerationRequest(rid=9, prompt=np.zeros(30, np.int32),
-                                    max_new_tokens=4))
+        Scheduler(num_slots=1, max_len=16, prompt_buckets=(8, 32))
+
+
+def test_scheduler_admit_batch_groups_fifo_head_run():
+    s = Scheduler(num_slots=4, max_len=64)          # buckets 8/16/32/64
+    lens = [5, 8, 13, 7, 6]                          # buckets 8,8,16,8,8
+    for i, l in enumerate(lens):
+        s.submit(GenerationRequest(rid=i, prompt=np.ones(l, np.int32),
+                                   max_new_tokens=2))
+    b0 = s.admit_batch()                             # head-run: rids 0,1
+    assert not b0.chunked and b0.bucket == 8
+    assert [r.rid for _, r in b0.items] == [0, 1]    # stops at rid 2 (b16)
+    b1 = s.admit_batch()
+    assert b1.bucket == 16 and [r.rid for _, r in b1.items] == [2]
+    b2 = s.admit_batch()                             # free-list caps the run
+    assert b2.bucket == 8 and [r.rid for _, r in b2.items] == [3]
+    assert s.admit_batch() is None and len(s.queue) == 1
+    for slot, _ in b0.items:
+        s.retire(slot)
+    b3 = s.admit_batch()
+    assert [r.rid for _, r in b3.items] == [4]
 
 
 # ---------------------------------------------------------------------------
@@ -133,6 +165,54 @@ def test_kv_update_scalar_and_vector_writes(rng):
     np.testing.assert_allclose(np.asarray(deq[0, 1]), np.asarray(ref[0, 0]))
     np.testing.assert_allclose(np.asarray(deq[1, 6]), np.asarray(ref[1, 0]))
     assert float(jnp.abs(deq[0, 2:]).max()) == 0.0    # rest untouched
+
+
+def test_write_slot_batched_matches_sequential(rng, tiny_lm):
+    """One batched write_slot dispatch (B rows) is bit-identical to B
+    sequential single-slot splices, for dense AND INT8 QuantizedKV storage;
+    padding rows (slot == num_slots) are dropped."""
+    cfg, _, _ = tiny_lm
+    from repro.serving import write_slot
+    for quantized in (False, True):
+        cache = init_slot_cache(cfg, KVCacheConfig(num_slots=4, max_len=32,
+                                                   quantized=quantized))
+        kv = {"k": cache["k"], "v": cache["v"]}
+        shape = (cfg.num_layers, 3, 8, cfg.num_kv_heads,
+                 cfg.resolved_head_dim)
+        k_new = jnp.asarray(rng.normal(size=shape), jnp.float32)
+        v_new = jnp.asarray(rng.normal(size=shape), jnp.float32)
+        slots = jnp.asarray([2, 0, 4])               # 4 == num_slots: pad row
+        batched = write_slot(kv, slots, k_new, v_new)
+        seq = kv
+        for i in (0, 1):                              # pad row never written
+            seq = write_slot(seq, jnp.int32(int(slots[i])),
+                             k_new[:, i:i + 1], v_new[:, i:i + 1])
+        for name in ("k", "v"):
+            for a, b in zip(jax.tree.leaves(batched[name]),
+                            jax.tree.leaves(seq[name])):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_slot_rows_roundtrip(rng, tiny_lm):
+    """slot_rows/set_slot_rows (the chunked prefill's working view) slice
+    and splice one slot's rows exactly, dense and quantized."""
+    cfg, _, _ = tiny_lm
+    from repro.serving import set_slot_rows, slot_rows
+    for quantized in (False, True):
+        cache = init_slot_cache(cfg, KVCacheConfig(num_slots=3, max_len=16,
+                                                   quantized=quantized))
+        entry = cache["k"]
+        row = slot_rows(entry, jnp.int32(1))
+        leaves = jax.tree.leaves(row)
+        assert all(l.shape[1] == 1 for l in leaves)
+        bumped = jax.tree.map(lambda x: x + 1, row)
+        back = set_slot_rows(entry, jnp.int32(1), bumped)
+        for a, b in zip(jax.tree.leaves(slot_rows(back, jnp.int32(1))),
+                        jax.tree.leaves(bumped)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(slot_rows(back, jnp.int32(0))),
+                        jax.tree.leaves(slot_rows(entry, jnp.int32(0)))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 def test_int8_cache_bytes_about_half_of_dense(tiny_lm):
@@ -214,6 +294,116 @@ def test_engine_warmup_fits_tight_budgets(tiny_lm):
     results = engine.run()
     assert engine.compile_counts() == compiled
     assert sorted(len(r.tokens) for r in results) == [1, 2]
+
+
+def test_engine_burst_admits_in_one_dispatch(tiny_lm):
+    """Acceptance: a burst of B same-bucket requests admits in ONE batched
+    prefill dispatch (not B), with greedy outputs still bit-identical to
+    the static path and zero recompilation after warmup."""
+    cfg, model, params = tiny_lm
+    max_len = 64
+    reqs = _requests(cfg, lens=[20, 22, 19, 24], gens=[4, 6, 3, 5])  # b32 ×4
+    engine = Engine(model, params, EngineConfig(num_slots=4, max_len=max_len))
+    compiled = engine.warmup(reqs)
+    for r in reqs:
+        engine.submit(r)
+    results = engine.run()
+    assert engine.prefill_dispatches == 1            # one device call for 4
+    assert engine.prefill_admitted == len(reqs)
+    assert engine.compile_counts() == compiled       # no recompilation
+    by_rid = {r.rid: r.tokens for r in results}
+    step_fns = _static_step_fns(model)
+    from repro.launch.serve import static_greedy_reference
+    for req in reqs:
+        assert by_rid[req.rid] == static_greedy_reference(
+            model, params, req, max_len, step_fns), req.rid
+
+
+def test_engine_compile_flat_across_burst_sizes(tiny_lm):
+    """Warmup pre-compiles the (bucket × pow2-batch-bucket) prefill grid:
+    bursts of every size then run with zero new compiles."""
+    cfg, model, params = tiny_lm
+    engine = Engine(model, params, EngineConfig(num_slots=4, max_len=32))
+    compiled = engine.warmup(_requests(cfg, lens=[10], gens=[2]))
+    rng = np.random.default_rng(7)
+    rid = 0
+    for burst in (1, 2, 3, 4):
+        reqs = _requests(cfg, lens=[12] * burst, gens=[2] * burst, rng=rng)
+        for r in reqs:
+            r.rid = rid = rid + 1
+            engine.submit(r)
+        engine.run()
+        assert engine.compile_counts() == compiled, burst
+    # 1+2+3+4 requests in 4 dispatches (one per burst: run() drains the
+    # queue before the first decode step of each burst)
+    assert engine.prefill_dispatches == 4
+    assert engine.prefill_admitted == 10
+
+
+def test_engine_chunked_long_prompt_matches_static_path(tiny_lm):
+    """Acceptance: prompts LONGER than the largest bucket stream through
+    the bucket-width chunk program and still produce greedy output
+    bit-identical to the static path — including slot reuse after a
+    long-prompt request (2 slots, 4 requests) — with no compile after
+    warmup."""
+    cfg, model, params = tiny_lm
+    max_len = 64
+    reqs = _requests(cfg, lens=[20, 40, 9, 33], gens=[4, 3, 5, 2])
+    engine = Engine(model, params,
+                    EngineConfig(num_slots=2, max_len=max_len,
+                                 prompt_buckets=(8, 16)))
+    compiled = engine.warmup(reqs)
+    assert compiled["chunk"] == 1                    # one program, ever
+    for r in reqs:
+        engine.submit(r)
+    results = engine.run()
+    assert engine.compile_counts() == compiled       # no recompilation
+    # ceil(20/16) + ceil(40/16) + ceil(33/16) chunks; rid 2 (9 <= 16) is
+    # a normal bucketed admission
+    assert engine.chunk_dispatches == 2 + 3 + 3
+    assert engine.chunked_admitted == 3
+    by_rid = {r.rid: r.tokens for r in results}
+    step_fns = _static_step_fns(model)
+    from repro.launch.serve import static_greedy_reference
+    for req in reqs:
+        assert by_rid[req.rid] == static_greedy_reference(
+            model, params, req, max_len, step_fns), req.rid
+
+
+def test_engine_chunked_int8_cache_completes(tiny_lm):
+    """Long prompts through the INT8 QuantizedKV slot cache: the chunk
+    program quantizes on write and attends the dequantized rows — the
+    trace completes with the right budgets and no post-warmup compiles."""
+    cfg, model, params = tiny_lm
+    reqs = _requests(cfg, lens=[20, 40, 9, 33], gens=[4, 3, 5, 2])
+    engine = Engine(model, params,
+                    EngineConfig(num_slots=2, max_len=64,
+                                 prompt_buckets=(8, 16), kv_quantized=True))
+    compiled = engine.warmup(reqs)
+    for r in reqs:
+        engine.submit(r)
+    results = engine.run()
+    assert engine.compile_counts() == compiled
+    assert sorted(len(r.tokens) for r in results) == sorted(
+        r.max_new_tokens for r in reqs)
+
+
+def test_engine_warmup_guards_non_idle(tiny_lm):
+    """warmup() drains the scheduler, so calling it with live submissions
+    would silently execute and discard them — it must raise instead, and
+    a proper warmup-then-submit run returns only caller rids."""
+    cfg, model, params = tiny_lm
+    engine = Engine(model, params, EngineConfig(num_slots=2, max_len=32))
+    reqs = _requests(cfg, lens=[6], gens=[2])
+    engine.submit(reqs[0])
+    with pytest.raises(RuntimeError):
+        engine.warmup(reqs)
+    results = engine.run()                           # the real request runs
+    assert [r.rid for r in results] == [0]
+    engine2 = Engine(model, params, EngineConfig(num_slots=2, max_len=32))
+    engine2.warmup(reqs)                             # idle: fine
+    engine2.submit(reqs[0])
+    assert [r.rid for r in engine2.run()] == [0]     # warmup rids filtered
 
 
 def test_engine_int8_cache_completes_with_half_bytes(tiny_lm):

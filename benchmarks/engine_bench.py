@@ -14,7 +14,16 @@ ride along:
   wide burst costs ONE device call), with no post-warmup compiles;
 - **long_prompt** — prompts beyond the largest bucket stream through the
   bucket-width chunked-prefill program; greedy output stays bit-identical
-  to the static path.
+  to the static path;
+- **shared_prefix** — a Zipf trace behind one shared system prefix on the
+  PAGED engine: repeat prefixes admit copy-free off the prefix cache
+  (reports hit rate and prompt tokens reused), parity-checked;
+- **overload** — an oversubscribed page pool: decode extension preempts
+  the youngest request (pages spill to host) and resumes it later, with
+  every request — preempted ones included — still bit-identical.
+
+The main dense/int8 slot rows are joined by ``paged_dense``/``paged_int8``
+rows (same trace through the paged pool) carrying ``page_stats``.
 
     PYTHONPATH=src python -m benchmarks.engine_bench [--tiny]
 
@@ -73,6 +82,7 @@ def run_engine(model, params, cfg, ecfg: EngineConfig, reqs):
         # None = jit cache sizes unavailable (UNKNOWN, not "no recompile")
         "recompiled_after_warmup": (compiled != compiled_warm
                                     if counts_known else None),
+        **({"page_stats": ps} if (ps := engine.page_stats()) else {}),
     }, results
 
 
@@ -146,6 +156,73 @@ def long_prompt_scenario(model, params, cfg, *, slots, buckets, max_len,
     return row
 
 
+def shared_prefix_scenario(model, params, cfg, *, slots, requests, seed=3):
+    """Zipf-tail trace behind one shared system prefix (the production
+    shape prefix caching exists for): the paged engine admits repeat
+    prefixes copy-free — reused prompt tokens never re-prefill — while
+    greedy output stays bit-identical to the static path."""
+    from repro.serving import GenerationRequest, SamplingParams
+    pg, prefix_len, max_len, gen = 8, 16, 48, 6
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(1, cfg.vocab_size, size=prefix_len).astype(np.int32)
+    reqs = []
+    for i in range(requests):
+        tail = rng.integers(1, cfg.vocab_size,
+                            size=int(np.clip(rng.zipf(1.6), 1, 16)))
+        reqs.append(GenerationRequest(
+            rid=i, prompt=np.concatenate([prefix, tail.astype(np.int32)]),
+            max_new_tokens=gen, sampling=SamplingParams()))
+    ecfg = EngineConfig(num_slots=slots, max_len=max_len,
+                        kv_dtype=jnp.float32, kv_layout="paged",
+                        page_size=pg)
+    row, results = run_engine(model, params, cfg, ecfg, reqs)
+    ps = row["page_stats"]
+    hits, misses = ps["prefix_hits"], ps["prefix_misses"]
+    row.update(shared_prefix_len=prefix_len, page_size=pg,
+               prefix_hit_rate=hits / max(hits + misses, 1),
+               prompt_tokens=sum(r.prompt_len for r in reqs),
+               prompt_tokens_reused=ps["prefix_hit_tokens"])
+    assert hits > 0, "shared-prefix trace must hit the prefix cache"
+    assert ps["prefix_hit_tokens"] > 0
+    assert row["recompiled_after_warmup"] is not True
+    n = check_parity(model, params, reqs, results, max_len,
+                     min(4, requests), step_fns=make_step_fns(model))
+    row["parity_checked"] = n
+    return row
+
+
+def overload_scenario(model, params, cfg, *, requests=8, seed=4):
+    """Page-pool oversubscription (num_pages well below slots' worst case):
+    decode extension must preempt the youngest request, spill its pages to
+    host, and resume it later — with greedy output still bit-identical to
+    the static path for every request, preempted ones included."""
+    from repro.serving import GenerationRequest, SamplingParams
+    pg, max_len, gen, slots, num_pages = 8, 48, 12, 3, 9
+    rng = np.random.default_rng(seed)
+    reqs = [GenerationRequest(
+                rid=i,
+                prompt=rng.integers(1, cfg.vocab_size,
+                                    size=int(28 + i % 4)).astype(np.int32),
+                max_new_tokens=gen, sampling=SamplingParams())
+            for i in range(requests)]
+    ecfg = EngineConfig(num_slots=slots, max_len=max_len,
+                        kv_dtype=jnp.float32, kv_layout="paged",
+                        page_size=pg, num_pages=num_pages,
+                        prefix_caching=False)
+    row, results = run_engine(model, params, cfg, ecfg, reqs)
+    ps = row["page_stats"]
+    row.update(num_pages=num_pages, page_size=pg,
+               pool_utilization=ps["peak_pages_in_use"] / num_pages)
+    assert ps["preemptions"] > 0 and ps["resumes"] > 0, \
+        "oversubscribed pool must preempt"
+    assert ps["peak_pages_in_use"] <= num_pages
+    # every request — including preempted-and-resumed ones — stays exact
+    n = check_parity(model, params, reqs, results, max_len, requests,
+                     step_fns=make_step_fns(model))
+    row["parity_checked"] = n
+    return row
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama32-1b")
@@ -175,10 +252,17 @@ def main():
           f"requests={args.requests} max_len={max_len} "
           f"(mean prompt {mean_p:.1f}, mean new {mean_n:.1f})")
 
+    # page_size must divide max_len for paged/slot bit-parity; 12 divides
+    # both the CI (24+12) and default (48+24) shapes
+    page = 12 if max_len % 12 == 0 else 8
     rows = {}
-    for name, quant in (("dense", False), ("int8", True)):
+    for name, quant, layout in (("dense", False, "slots"),
+                                ("int8", True, "slots"),
+                                ("paged_dense", False, "paged"),
+                                ("paged_int8", True, "paged")):
         ecfg = EngineConfig(num_slots=args.slots, max_len=max_len,
-                            kv_dtype=jnp.bfloat16, kv_quantized=quant)
+                            kv_dtype=jnp.bfloat16, kv_quantized=quant,
+                            kv_layout=layout, page_size=page)
         rows[name], results = run_engine(model, params, cfg, ecfg, reqs)
         if name == "dense" and args.parity_check:
             # bf16 cache rounds K/V — rerun the parity slice on an f32 cache
@@ -191,7 +275,7 @@ def main():
             print(f"  parity: {n}/{n} requests bit-identical to the "
                   f"static path (f32 KV)")
         r = rows[name]
-        print(f"  {name:5s} {r['tok_per_s']:8.0f} tok/s   "
+        print(f"  {name:11s} {r['tok_per_s']:8.0f} tok/s   "
               f"p50 {r['latency_p50_ms']:7.1f}ms   "
               f"p99 {r['latency_p99_ms']:7.1f}ms   "
               f"util {r['slot_utilization']:.2f}   "
@@ -216,6 +300,25 @@ def main():
           f"{burst['tok_per_s']:.0f} tok/s, parity {burst['parity_checked']} "
           f"reqs, recompiled={burst['recompiled_after_warmup']}")
 
+    shared = shared_prefix_scenario(model, params, cfg, slots=args.slots,
+                                    requests=3 * args.slots)
+    sps = shared["page_stats"]
+    print(f"  shared-prefix ({shared['shared_prefix_len']} tokens x "
+          f"{shared['requests']} requests): "
+          f"hit rate {shared['prefix_hit_rate']:.0%}, "
+          f"{shared['prompt_tokens_reused']}/{shared['prompt_tokens']} prompt "
+          f"tokens reused, {sps['prefix_cached_pages']} pages cached, "
+          f"parity {shared['parity_checked']} reqs, "
+          f"recompiled={shared['recompiled_after_warmup']}")
+
+    overload = overload_scenario(model, params, cfg)
+    ops = overload["page_stats"]
+    print(f"  overload ({overload['num_pages']} pages, peak "
+          f"{ops['peak_pages_in_use']}): {ops['preemptions']} preemptions, "
+          f"{ops['resumes']} resumes, {ops['pages_spilled']} pages spilled, "
+          f"pool util {overload['pool_utilization']:.2f}, "
+          f"parity {overload['parity_checked']} reqs")
+
     lp_buckets = (8, args.max_prompt // 2)
     longp = long_prompt_scenario(model, params, cfg, slots=args.slots,
                                  buckets=lp_buckets, max_len=max_len,
@@ -232,7 +335,9 @@ def main():
         "max_len": max_len,
         "mean_prompt_len": mean_p, "mean_new_tokens": mean_n,
         "dense": rows["dense"], "int8": rows["int8"],
+        "paged_dense": rows["paged_dense"], "paged_int8": rows["paged_int8"],
         "burst": burst, "long_prompt": longp,
+        "shared_prefix": shared, "overload": overload,
         "kv_compression_x": ratio,
     })
     print(f"wrote {out}")

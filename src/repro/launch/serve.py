@@ -13,7 +13,13 @@ docs/serving.md):
 
   PYTHONPATH=src python -m repro.launch.serve --tiny --engine continuous \
       --requests 32 --slots 8 --gen 32 [--buckets 8,16] [--kv-quant] \
-      [--verify]
+      [--kv paged --page-size 16 --pages 0] [--mixed-admission] [--verify]
+
+``--kv paged`` swaps the slot cache for a fixed-size-page pool with a
+free-list allocator, refcounted shared-prefix page reuse, and
+preemption-aware scheduling (youngest spills to host under page
+pressure, resumes bit-identically). Greedy outputs stay bit-identical
+to the slot engine whenever page-size divides max-len.
 
 With ``--packed`` the checkpoint is a packed QTensor checkpoint (written by
 ``repro.launch.compress --save-packed``): quantized layers stay packed
@@ -217,7 +223,12 @@ def _serve_engine(args, cfg, model, params):
     ecfg = EngineConfig(num_slots=args.slots, max_len=max_len,
                         prompt_buckets=buckets,
                         kv_quantized=args.kv_quant,
-                        kv_dtype=jnp.float32)
+                        kv_dtype=jnp.float32,
+                        kv_layout=args.kv,
+                        page_size=args.page_size,
+                        num_pages=args.pages,
+                        prefix_caching=not args.no_prefix_cache,
+                        mixed_admission=args.mixed_admission)
     engine = Engine(model, params, ecfg)
     reqs = build_trace(cfg, num_requests=args.requests,
                        max_prompt=min(args.prompt_len, max_len - args.gen),
@@ -249,8 +260,19 @@ def _serve_engine(args, cfg, model, params):
     print(admit_note)
     print(f"[serve] kv cache resident "
           f"{engine.kv_cache_bytes() / 1e6:.2f}MB "
-          f"({'int8' if args.kv_quant else 'dense'}), compiled programs "
-          f"{after} (warmup {compiled})")
+          f"({'int8' if args.kv_quant else 'dense'}, {args.kv}), "
+          f"compiled programs {after} (warmup {compiled})")
+    ps = engine.page_stats()
+    if ps:
+        print(f"[serve] pages: {ps['pages_in_use']}/{ps['num_pages']} in use "
+              f"(peak {ps['peak_pages_in_use']}, size {ps['page_size']}), "
+              f"{ps['prefix_cached_pages']} prefix-cached")
+        hits, misses = ps["prefix_hits"], ps["prefix_misses"]
+        rate = hits / max(hits + misses, 1)
+        print(f"[serve] prefix cache: {hits} hits / {misses} misses "
+              f"({rate:.0%}), {ps['prefix_hit_tokens']} prompt tokens reused")
+        print(f"[serve] preemptions {ps['preemptions']}, resumes "
+              f"{ps['resumes']}, pages spilled {ps['pages_spilled']}")
     if None in after.values() or None in compiled.values():
         print("[serve] note: jit cache sizes unavailable on this jax — "
               "recompilation check is UNKNOWN")
@@ -299,6 +321,24 @@ def main():
                          "the largest bucket stream via chunked prefill")
     ap.add_argument("--kv-quant", action="store_true",
                     help="engine: INT8 per-head-group KV cache")
+    ap.add_argument("--kv", choices=("slots", "paged"), default="slots",
+                    help="engine KV layout: slots (one contiguous max-len "
+                         "row per slot) or paged (fixed-size-page pool with "
+                         "shared-prefix reuse and preemption)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="engine --kv paged: tokens per KV page (greedy "
+                         "bit-parity with slots needs page-size | max-len)")
+    ap.add_argument("--pages", type=int, default=0,
+                    help="engine --kv paged: page-pool size (0 -> "
+                         "slots * ceil(max-len / page-size), i.e. the slot "
+                         "engine's footprint; smaller pools oversubscribe "
+                         "and trigger preemption)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="engine --kv paged: disable shared-prefix page "
+                         "reuse across requests")
+    ap.add_argument("--mixed-admission", action="store_true",
+                    help="engine: admit mixed-bucket FIFO head-runs in one "
+                         "right-padded prefill dispatch")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)

@@ -18,7 +18,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.quant import QTensor
-from repro.serving.kv_cache import QuantizedKV, kv_dequantize, kv_update
+from repro.serving.kv_cache import (QuantizedKV, kv_dequantize, kv_update,
+                                    kv_quantize, paged_view)
 from repro.sharding import ShardingRules, NO_RULES, hint
 
 
@@ -116,7 +117,7 @@ def mlp_act(x: jax.Array, kind: str) -> jax.Array:
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, q_offset=0,
                     q_chunk: int = 1024, kv_chunk: int = 1024,
-                    p_dtype=jnp.float32) -> jax.Array:
+                    p_dtype=jnp.float32, kv_pages=None) -> jax.Array:
     """q: (B, Sq, H, D); k, v: (B, Skv, Hk, D) with H % Hk == 0.
 
     Double-chunked online-softmax attention in pure JAX: an outer scan over
@@ -124,9 +125,26 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     memory is O(q_chunk × kv_chunk) per head — required for the 32k-prefill
     and 4k-train shapes at production width (DESIGN.md §4).
     ``q_offset`` is the absolute position of q[0] (decode/prefill continua).
+
+    ``kv_pages=(block_table, page_size)`` switches K/V to the paged layout:
+    k, v are per-layer page POOLS — (P, page, Hk, D) dense or a
+    :class:`~repro.serving.kv_cache.QuantizedKV` with those leading dims —
+    and ``block_table`` (B, n_pages) int32 maps each row's kv positions to
+    physical pages. Each inner step gathers only its own kv_chunk worth of
+    pages in-tile (quantized pools dequantize the gathered tile), so the
+    contiguous (B, Skv) view is never materialized. Sentinel table entries
+    (== P) clip to the last physical page; their garbage is strictly beyond
+    every live query's causal mask, so outputs are bit-identical to the
+    contiguous path over the same written tokens.
     """
     b, sq, h, d = q.shape
-    _, skv, hk, _ = k.shape
+    if kv_pages is not None:
+        table, page_size = kv_pages
+        store = k.codes if isinstance(k, QuantizedKV) else k
+        hk = store.shape[-2]
+        skv = table.shape[1] * page_size
+    else:
+        _, skv, hk, _ = k.shape
     assert h % hk == 0
     g = h // hk
     q_chunk = min(q_chunk, sq)
@@ -141,14 +159,44 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         widths[axis] = (0, pad)
         return jnp.pad(x, widths), n
     q, sq0 = pad_to(q, q_chunk, 1)
-    k, skv0 = pad_to(k, kv_chunk, 1)
-    v, _ = pad_to(v, kv_chunk, 1)
-    sq_p, skv_p = q.shape[1], k.shape[1]
-    nq, nk = sq_p // q_chunk, skv_p // kv_chunk
-
     scale = 1.0 / math.sqrt(d)
-    kg = k.reshape(b, nk, kv_chunk, hk, d)
-    vg = v.reshape(b, nk, kv_chunk, hk, d)
+
+    if kv_pages is not None:
+        # page-aligned kv chunks: gather pages_per_chunk pages per step
+        ppc = max(kv_chunk // page_size, 1)
+        kv_chunk = ppc * page_size
+        npg = table.shape[1]
+        npg_p = -(-npg // ppc) * ppc
+        if npg_p != npg:                     # sentinel-pad the table itself
+            table = jnp.pad(table, ((0, 0), (0, npg_p - npg)),
+                            constant_values=store.shape[0])
+        skv0, skv_p = skv, npg_p * page_size
+
+        def fetch(ki):
+            pages = jax.lax.dynamic_slice(table, (0, ki * ppc), (b, ppc))
+            def grab(pool):
+                gt = pool[pages]             # (B, ppc, page, ...)
+                return gt.reshape(b, kv_chunk, *pool.shape[2:])
+            if isinstance(k, QuantizedKV):
+                return (kv_dequantize(QuantizedKV(
+                            grab(k.codes), grab(k.scale), grab(k.zero),
+                            k.group_size), q.dtype),
+                        kv_dequantize(QuantizedKV(
+                            grab(v.codes), grab(v.scale), grab(v.zero),
+                            v.group_size), q.dtype))
+            return grab(k), grab(v)
+    else:
+        k, skv0 = pad_to(k, kv_chunk, 1)
+        v, _ = pad_to(v, kv_chunk, 1)
+        skv_p = k.shape[1]
+        kg = k.reshape(b, skv_p // kv_chunk, kv_chunk, hk, d)
+        vg = v.reshape(b, skv_p // kv_chunk, kv_chunk, hk, d)
+
+        def fetch(ki):
+            return kg[:, ki], vg[:, ki]
+
+    sq_p = q.shape[1]
+    nq, nk = sq_p // q_chunk, skv_p // kv_chunk
     qg = q.reshape(b, nq, q_chunk, h, d)
 
     q_pos = (jnp.arange(sq_p) + q_offset).reshape(nq, q_chunk)
@@ -162,8 +210,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         @jax.checkpoint   # recompute P in backward: true flash-attention
         def kv_step(carry, ki):                     # memory (no saved scores)
             m, l, acc = carry
-            kc = kg[:, ki]                          # (B, kc, Hk, D)
-            vc = vg[:, ki]
+            kc, vc = fetch(ki)                      # (B, kc, Hk, D)
             s = _scores(qc, kc, g) * scale          # (B, H, qc, kc)
             mask = kv_valid[ki][None, None, None, :]
             if causal:
@@ -213,6 +260,39 @@ def _pv(p: jax.Array, vc: jax.Array, g: int) -> jax.Array:
     out = jnp.einsum("bkgqn,bnkd->bkgqd", pg, vc.astype(p.dtype),
                      preferred_element_type=jnp.float32)
     return out.reshape(b, h, qn, -1)
+
+
+def paged_write(entry, table, pos, new, page_size: int):
+    """Scatter ``new`` (B, s, Hk, D) tokens into a per-layer page pool
+    through the block table.
+
+    ``pos`` vector (B,) with s == 1 (the engine decode path: each row
+    writes at its own position) or scalar with s >= 1 (the chunked
+    prefill: s consecutive positions from ``pos``). A position landing on
+    a sentinel table entry — a parked slot's row, or a final chunk's
+    padded tail past the request's allocated pages — is dropped, never
+    written (in particular nothing ever lands in another request's page)."""
+    b, s = new.shape[0], new.shape[1]
+    num_pages = (entry.codes if isinstance(entry, QuantizedKV)
+                 else entry).shape[0]
+    npg = table.shape[1]
+    if getattr(pos, "ndim", 0) == 1:
+        assert s == 1, "per-slot paged writes are one token per step"
+        cols = pos[:, None]                               # (B, 1)
+    else:
+        cols = jnp.broadcast_to((pos + jnp.arange(s))[None, :], (b, s))
+    valid = cols < npg * page_size
+    pidx = jnp.clip(cols // page_size, 0, npg - 1)
+    pages = jnp.take_along_axis(table, pidx, axis=1)      # (B, s)
+    pages = jnp.where(valid, pages, num_pages)            # OOB → dropped
+    offs = cols % page_size
+    if isinstance(entry, QuantizedKV):
+        qn = kv_quantize(new, entry.group_size)
+        return QuantizedKV(entry.codes.at[pages, offs].set(qn.codes),
+                           entry.scale.at[pages, offs].set(qn.scale),
+                           entry.zero.at[pages, offs].set(qn.zero),
+                           entry.group_size)
+    return entry.at[pages, offs].set(new.astype(entry.dtype))
 
 
 def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
@@ -270,6 +350,7 @@ def mlp_params(key, cfg, dtype=jnp.float32, d_ff: Optional[int] = None):
 def attn_apply(p, x, cfg, rules: ShardingRules = NO_RULES, *,
                positions=None, capture=None,
                kv_cache=None, cache_pos=None, attend_cache: bool = False,
+               block_table=None,
                attn_chunk: int = 1024, attn_p_dtype=jnp.float32):
     """Pre-norm attention block (residual added by caller).
 
@@ -291,6 +372,15 @@ def attn_apply(p, x, cfg, rules: ShardingRules = NO_RULES, *,
     chunk, so earlier chunks of the same prompt are visible. Quantized
     caches attend the dequantized rows, including this chunk's own
     (quantize-rounded) keys.
+
+    ``block_table`` (B, n_pages) int32 switches the cache to the PAGED
+    layout: cache entries are per-layer page pools (P, page, Hk, D) —
+    ``page`` is read off the pool shape — and every position routes
+    through the table (writes via :func:`paged_write`, decode reads via a
+    page gather, chunked-prefill reads via the in-tile paged flash path).
+    Gathered views hold the same written values at the same positions as a
+    slot-cache row (everything else is causally masked), so paged greedy
+    output is bit-identical to the slot path, dense and INT8 alike.
     """
     b, s, d = x.shape
     hd = cfg.resolved_head_dim
@@ -312,6 +402,29 @@ def attn_apply(p, x, cfg, rules: ShardingRules = NO_RULES, *,
         out = flash_attention(q, k, v, causal=True, q_chunk=attn_chunk,
                               kv_chunk=attn_chunk, p_dtype=attn_p_dtype)
         new_kv = (k, v)
+    elif block_table is not None:
+        k_cache, v_cache = kv_cache                  # pools (P, page, Hk, D)
+        page = (k_cache.codes if isinstance(k_cache, QuantizedKV)
+                else k_cache).shape[1]
+        k_cache = paged_write(k_cache, block_table, cache_pos, k, page)
+        v_cache = paged_write(v_cache, block_table, cache_pos, v, page)
+        if s == 1:
+            k_r = paged_view(k_cache, block_table)
+            v_r = paged_view(v_cache, block_table)
+            if isinstance(k_r, QuantizedKV):
+                k_r = kv_dequantize(k_r, q.dtype)
+                v_r = kv_dequantize(v_r, q.dtype)
+            out = decode_attention(q, k_r, v_r, positions, rules,
+                                   p_dtype=attn_p_dtype)
+        else:
+            assert attend_cache, \
+                "paged s > 1 is the chunked-prefill contract (batched " \
+                "prefill fills a dense mini-cache, then write_pages)"
+            out = flash_attention(q, k_cache, v_cache, causal=True,
+                                  q_offset=cache_pos, q_chunk=attn_chunk,
+                                  kv_chunk=attn_chunk, p_dtype=attn_p_dtype,
+                                  kv_pages=(block_table, page))
+        new_kv = (k_cache, v_cache)
     else:
         k_cache, v_cache = kv_cache                  # (B, Smax, Hk, D)
         if isinstance(k_cache, QuantizedKV):
@@ -388,5 +501,6 @@ def mlp_apply(p, x, cfg, rules: ShardingRules = NO_RULES, *, capture=None):
 
 
 __all__ = ["dense_init", "embed_init", "rmsnorm", "rope", "mlp_act",
-           "flash_attention", "decode_attention", "attn_params", "mlp_params",
+           "flash_attention", "decode_attention", "paged_write",
+           "attn_params", "mlp_params",
            "attn_apply", "mlp_apply", "linear_apply", "expert_apply"]

@@ -297,11 +297,12 @@ def moe_block_params(key, cfg: ModelConfig, dtype=jnp.float32):
 
 def moe_block_apply(p, x, cfg, rules=NO_RULES, *, positions=None, capture=None,
                     kv_cache=None, cache_pos=None, attend_cache=False,
-                    prefer_a2a=True, attn_chunk: int = 1024,
+                    block_table=None, prefer_a2a=True, attn_chunk: int = 1024,
                     attn_p_dtype=jnp.float32):
     a, new_kv = L.attn_apply(p["attn"], x, cfg, rules, positions=positions,
                              capture=capture, kv_cache=kv_cache,
                              cache_pos=cache_pos, attend_cache=attend_cache,
+                             block_table=block_table,
                              attn_chunk=attn_chunk,
                              attn_p_dtype=attn_p_dtype)
     x = x + a
@@ -360,6 +361,7 @@ class MoEModel(T.DenseModel):
         # prefill (many tokens) uses the a2a path; decode (1 token) the
         # masked-dense path (DESIGN.md §4 MoE path table)
         a2a_ok = self.prefer_a2a and positions.shape[1] > 1
+        table = cache.get("table")      # paged layout (see DenseModel)
         def body(x, scanned):
             layer_p, kc, vc = scanned
             y, (kc2, vc2) = moe_block_apply(layer_p, x, cfg, rules,
@@ -367,6 +369,7 @@ class MoEModel(T.DenseModel):
                                             kv_cache=(kc, vc),
                                             cache_pos=cache["pos"],
                                             attend_cache=attend_cache,
+                                            block_table=table,
                                             prefer_a2a=a2a_ok,
                                             attn_chunk=self.attn_chunk,
                                             attn_p_dtype=self.attn_p_dtype)
@@ -382,8 +385,11 @@ class MoEModel(T.DenseModel):
         else:
             h, (k_new, v_new) = jax.lax.scan(
                 body, h, (params["blocks"], cache["k"], cache["v"]))
-        return h, {"k": k_new, "v": v_new,
-                   "pos": cache["pos"] + positions.shape[1]}
+        out = {"k": k_new, "v": v_new,
+               "pos": cache["pos"] + positions.shape[1]}
+        if table is not None:
+            out["table"] = table
+        return h, out
 
     def block_apply_one(self, params, i, h, *, capture=False):
         cfg = self.cfg

@@ -31,10 +31,12 @@ def block_params(key, cfg: ModelConfig, dtype=jnp.float32):
 
 def block_apply(p, x, cfg, rules=NO_RULES, *, positions=None, capture=None,
                 kv_cache=None, cache_pos=None, attend_cache: bool = False,
+                block_table=None,
                 attn_chunk: int = 1024, attn_p_dtype=jnp.float32):
     a, new_kv = L.attn_apply(p["attn"], x, cfg, rules, positions=positions,
                              capture=capture, kv_cache=kv_cache,
                              cache_pos=cache_pos, attend_cache=attend_cache,
+                             block_table=block_table,
                              attn_chunk=attn_chunk,
                              attn_p_dtype=attn_p_dtype)
     x = x + a
@@ -185,6 +187,10 @@ class DenseModel:
     def _cached_scan(self, params, h, cache, positions, *,
                      attend_cache: bool = False):
         cfg, rules = self.cfg, self.rules
+        # paged layout: cache["table"] (B, n_pages) routes every cache
+        # access; it has no layer axis, so it rides into the scan body as a
+        # closed-over constant rather than a scanned operand
+        table = cache.get("table")
         def body(x, scanned):
             layer_p, kc, vc = scanned
             y, (kc2, vc2) = block_apply(layer_p, x, cfg, rules,
@@ -192,6 +198,7 @@ class DenseModel:
                                         kv_cache=(kc, vc),
                                         cache_pos=cache["pos"],
                                         attend_cache=attend_cache,
+                                        block_table=table,
                                         attn_chunk=self.attn_chunk,
                                         attn_p_dtype=self.attn_p_dtype)
             return y, (kc2, vc2)
@@ -208,6 +215,8 @@ class DenseModel:
                 body, h, (params["blocks"], cache["k"], cache["v"]))
         new_cache = {"k": k_new, "v": v_new,
                      "pos": cache["pos"] + positions.shape[1]}
+        if table is not None:
+            new_cache["table"] = table
         return h, new_cache
 
     @staticmethod

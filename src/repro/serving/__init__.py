@@ -1,19 +1,25 @@
-"""Serving runtime: continuous-batching engine over a slot-indexed,
-optionally INT8-quantized KV cache, with per-request sampling.
+"""Serving runtime: continuous-batching engine over a slot-indexed or
+paged, optionally INT8-quantized KV cache, with per-request sampling,
+shared-prefix reuse and preemption-aware scheduling.
 
-`kv_cache` / `sampling` / `scheduler` are model-free and import eagerly
-(``models/layers.py`` depends on `kv_cache` for the quantized-cache hook);
-the `Engine` itself imports the model stack, so it loads lazily — keeping
-`repro.serving.kv_cache` importable from inside `repro.models` without a
-cycle.
+`kv_cache` / `sampling` / `scheduler` / `paging` / `prefix_cache` are
+model-free and import eagerly (``models/layers.py`` depends on `kv_cache`
+for the quantized-cache hook); the `Engine` itself imports the model
+stack, so it loads lazily — keeping `repro.serving.kv_cache` importable
+from inside `repro.models` without a cycle.
 """
 from repro.serving.kv_cache import (KVCacheConfig, QuantizedKV, cache_bytes,
-                                    init_slot_cache, kv_dequantize,
-                                    kv_quantize, kv_update, set_slot_rows,
-                                    slot_rows, write_slot)
+                                    init_paged_storage, init_slot_cache,
+                                    kv_dequantize, kv_quantize, kv_update,
+                                    paged_view, set_slot_rows, slot_rows,
+                                    write_pages, write_slot)
+from repro.serving.paging import (PageAllocator, pow2_at_least,
+                                  restore_pages, spill_pages)
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.sampling import SamplingParams, sample_tokens
 from repro.serving.scheduler import (AdmittedBatch, GenerationRequest,
-                                     GenerationResult, Scheduler)
+                                     GenerationResult, ResumeTicket,
+                                     Scheduler)
 
 _LAZY = ("Engine", "EngineConfig", "batch_buckets")
 
@@ -26,7 +32,10 @@ def __getattr__(name):
 
 
 __all__ = ["AdmittedBatch", "Engine", "EngineConfig", "GenerationRequest",
-           "GenerationResult", "KVCacheConfig", "QuantizedKV",
-           "SamplingParams", "Scheduler", "batch_buckets", "cache_bytes",
+           "GenerationResult", "KVCacheConfig", "PageAllocator",
+           "PrefixCache", "QuantizedKV", "ResumeTicket", "SamplingParams",
+           "Scheduler", "batch_buckets", "cache_bytes", "init_paged_storage",
            "init_slot_cache", "kv_dequantize", "kv_quantize", "kv_update",
-           "sample_tokens", "set_slot_rows", "slot_rows", "write_slot"]
+           "paged_view", "pow2_at_least", "restore_pages", "sample_tokens",
+           "set_slot_rows", "slot_rows", "spill_pages", "write_pages",
+           "write_slot"]

@@ -30,8 +30,20 @@ besides the batch bucket), retire-on-completion. Retired slots keep
 decoding garbage at position 0 until reused — their writes land below the
 next request's prefill splice and are never attended.
 
-`launch/serve.py --engine continuous` drives it; `benchmarks/engine_bench.py`
-load-tests it (Zipf, burst, and long-prompt traces) into
+``kv_layout="paged"`` (the paged subsystem: ``serving/paging.py`` +
+``serving/prefix_cache.py``, docs/serving.md §paging) swaps the slot rows
+for a fixed pool of fixed-size pages routed through per-slot block tables:
+prefill splices through per-row page maps, the chunk program reads the
+pool via in-tile paged flash, decode gathers each slot's pages. On top of
+the indirection ride copy-free shared-prefix admission (a prefix cache
+maps page-aligned token prefixes to live pages; only the suffix prefills)
+and preempt-and-resume (under page pressure the youngest request's pages
+spill to host memory and its ResumeTicket re-enters the queue by seq).
+Greedy outputs stay token-identical to the slot layout.
+
+`launch/serve.py --engine continuous` drives it (``--kv paged|slots``);
+`benchmarks/engine_bench.py` load-tests it (Zipf, burst, long-prompt,
+shared-prefix, and overload/preemption traces) into
 ``results/BENCH_engine.json``.
 """
 from __future__ import annotations
@@ -45,11 +57,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.serving.kv_cache import (KVCacheConfig, cache_bytes,
-                                    init_slot_cache, set_slot_rows,
-                                    slot_rows, write_slot)
+                                    init_paged_storage, init_slot_cache,
+                                    set_slot_rows, slot_rows, write_pages,
+                                    write_slot)
+from repro.serving.paging import (PageAllocator, restore_pages, spill_pages)
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.sampling import sample_tokens
 from repro.serving.scheduler import (AdmittedBatch, GenerationRequest,
-                                     GenerationResult, Scheduler)
+                                     GenerationResult, ResumeTicket,
+                                     Scheduler)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,7 +74,20 @@ class EngineConfig:
     cache to INT8 per-head-group storage (``kv_group_size=0`` → one group
     per head); ``prompt_buckets=()`` → power-of-two buckets covering
     max_len. A custom ``prompt_buckets`` whose largest bucket is smaller
-    than max_len turns prompts beyond it into chunked prefills."""
+    than max_len turns prompts beyond it into chunked prefills.
+
+    ``kv_layout="paged"`` switches the cache from per-slot contiguous rows
+    to a fixed pool of ``page_size``-token pages routed through per-slot
+    block tables (``num_pages=0`` → num_slots · ceil(max_len/page_size),
+    the same token capacity as the slot layout). Paged mode enables
+    copy-free shared-prefix admission (``prefix_caching``) and
+    preempt-and-resume under page pressure. Greedy output is bit-identical
+    to the slot layout when ``page_size`` divides ``max_len`` (otherwise
+    the gathered cache view is wider than max_len and reduction shapes
+    differ by masked-out zeros). ``mixed_admission`` lets one prefill
+    dispatch admit a FIFO head-run that crosses prompt buckets
+    (right-padded to the largest member's bucket) — fewer dispatches,
+    identical outputs."""
     num_slots: int = 8
     max_len: int = 256
     prompt_buckets: tuple = ()
@@ -66,6 +95,11 @@ class EngineConfig:
     kv_quantized: bool = False
     kv_group_size: int = 0
     max_top_k: int = 64
+    kv_layout: str = "slots"           # "slots" | "paged"
+    page_size: int = 16
+    num_pages: int = 0                 # 0 → auto (slot-equivalent capacity)
+    prefix_caching: bool = True        # paged only
+    mixed_admission: bool = False      # cross-bucket admission runs
 
 
 def batch_buckets(num_slots: int) -> tuple:
@@ -91,12 +125,44 @@ class Engine:
         self.scheduler = Scheduler(cfg.num_slots, cfg.max_len,
                                    cfg.prompt_buckets)
         self.batch_buckets = batch_buckets(cfg.num_slots)
-        kv_cfg = KVCacheConfig(num_slots=cfg.num_slots, max_len=cfg.max_len,
-                               dtype=cfg.kv_dtype, quantized=cfg.kv_quantized,
-                               group_size=cfg.kv_group_size)
-        cache = init_slot_cache(mcfg, kv_cfg)
-        self.kv = {"k": cache["k"], "v": cache["v"]}   # pos lives host-side
+        if cfg.kv_layout not in ("slots", "paged"):
+            raise ValueError(f"kv_layout must be 'slots' or 'paged', got "
+                             f"{cfg.kv_layout!r}")
+        self._paged = cfg.kv_layout == "paged"
         s = cfg.num_slots
+        if self._paged:
+            pg = cfg.page_size
+            if pg < 1:
+                raise ValueError(f"page_size must be >= 1, got {pg}")
+            self.pages_per_slot = -(-cfg.max_len // pg)
+            num_pages = cfg.num_pages or s * self.pages_per_slot
+            if num_pages < self.pages_per_slot:
+                # the oldest request is unpreemptable; it must always be
+                # able to grow to max_len or admission can deadlock
+                raise ValueError(
+                    f"num_pages {num_pages} < pages_per_slot "
+                    f"{self.pages_per_slot}: one max_len request must fit")
+            self.kv = init_paged_storage(
+                mcfg, num_pages, pg, dtype=cfg.kv_dtype,
+                quantized=cfg.kv_quantized, group_size=cfg.kv_group_size)
+            self.alloc = PageAllocator(num_pages)
+            self.prefix = (PrefixCache(pg, self.alloc)
+                           if cfg.prefix_caching else None)
+            # block tables are host state; rows ride to the device as plain
+            # int32 data each dispatch (sentinel == num_pages everywhere a
+            # slot has no page: parked slots' decode writes are dropped)
+            self._table = np.full((s, self.pages_per_slot), num_pages,
+                                  np.int32)
+            self._slot_pages: List[List[int]] = [[] for _ in range(s)]
+        else:
+            kv_cfg = KVCacheConfig(num_slots=s, max_len=cfg.max_len,
+                                   dtype=cfg.kv_dtype,
+                                   quantized=cfg.kv_quantized,
+                                   group_size=cfg.kv_group_size)
+            cache = init_slot_cache(mcfg, kv_cfg)
+            self.kv = {"k": cache["k"], "v": cache["v"]}  # pos is host-side
+            self.alloc = None
+            self.prefix = None
         self._pos = np.zeros(s, np.int32)
         self._tok = np.zeros(s, np.int32)
         self._temps = np.zeros(s, np.float32)
@@ -115,12 +181,22 @@ class Engine:
         self.prefill_admitted = 0       # requests admitted via those calls
         self.chunk_dispatches = 0       # chunked-prefill device calls
         self.chunked_admitted = 0       # requests admitted via chunking
+        self.prefix_hits = 0            # admissions with a cached prefix
+        self.prefix_misses = 0          # admissions without one (paged only)
+        self.prefix_hit_tokens = 0      # prompt tokens skipped via reuse
+        self.preemptions = 0            # requests spilled under pressure
+        self.resumes = 0                # tickets restored onto a slot
+        self.pages_spilled = 0          # pages round-tripped through host
+        if self.alloc is not None:
+            self.alloc.peak_in_use = self.alloc.pages_in_use
 
     # -- jitted steps ------------------------------------------------------
     def _make_step_fns(self):
         model, cfg = self.model, self.cfg
         mcfg = model.cfg
         mini_dtype = jnp.float32 if cfg.kv_quantized else cfg.kv_dtype
+        if self._paged:
+            return self._make_paged_step_fns(mini_dtype)
 
         def prefill_fn(params, kv, tokens, lengths, slots, temps, topks,
                        seeds):
@@ -151,6 +227,56 @@ class Engine:
 
         def decode_fn(params, kv, pos, tokens, temps, topks, seeds, steps):
             cache = {"k": kv["k"], "v": kv["v"], "pos": pos}
+            logits, cache = model.decode_step(params, tokens, cache)
+            tok = sample_tokens(logits[:, 0, :], temps, topks, seeds, steps,
+                                max_top_k=cfg.max_top_k)
+            return tok, {"k": cache["k"], "v": cache["v"]}
+
+        return (jax.jit(prefill_fn, donate_argnums=1),
+                jax.jit(chunk_fn, donate_argnums=1),
+                jax.jit(decode_fn, donate_argnums=1))
+
+    def _make_paged_step_fns(self, mini_dtype):
+        """Paged mirrors of the three step programs. Prefill keeps the
+        slot path's math exactly (same dense mini-cache, same per-row
+        logit gather) and only the final splice differs — write_pages
+        scatters through per-row page maps instead of slot indices — so
+        paged greedy output matches the slot engine token for token.
+        Chunk and decode route every cache access through a block table
+        (in-tile paged flash / page-gathered decode view)."""
+        model, cfg = self.model, self.cfg
+        mcfg = model.cfg
+        pg = cfg.page_size
+
+        def prefill_fn(params, kv, tokens, lengths, page_maps, temps, topks,
+                       seeds):
+            b, w = tokens.shape
+            zeros = jnp.zeros((mcfg.num_layers, b, w, mcfg.num_kv_heads,
+                               mcfg.resolved_head_dim), mini_dtype)
+            mini = {"k": zeros, "v": zeros, "pos": jnp.zeros((), jnp.int32)}
+            logits, mini = model.prefill_at(params, {"tokens": tokens},
+                                            mini, lengths=lengths)
+            toks = sample_tokens(logits[:, 0, :], temps, topks, seeds,
+                                 jnp.zeros((b,), jnp.uint32),
+                                 max_top_k=cfg.max_top_k)
+            kv = write_pages(kv, page_maps, mini["k"], mini["v"], pg)
+            return toks, kv
+
+        def chunk_fn(params, kv, tokens, start, length, table_row, temp,
+                     topk, seed):
+            cache = {"k": kv["k"], "v": kv["v"], "pos": start,
+                     "table": table_row}
+            logits, cache = model.prefill_chunk(params, {"tokens": tokens},
+                                                cache, lengths=length[None])
+            tok = sample_tokens(logits[:, 0, :], temp[None], topk[None],
+                                seed[None], jnp.zeros((1,), jnp.uint32),
+                                max_top_k=cfg.max_top_k)
+            return tok[0], {"k": cache["k"], "v": cache["v"]}
+
+        def decode_fn(params, kv, pos, tokens, temps, topks, seeds, steps,
+                      tables):
+            cache = {"k": kv["k"], "v": kv["v"], "pos": pos,
+                     "table": tables}
             logits, cache = model.decode_step(params, tokens, cache)
             tok = sample_tokens(logits[:, 0, :], temps, topks, seeds, steps,
                                 max_top_k=cfg.max_top_k)
@@ -204,24 +330,39 @@ class Engine:
                 seen.setdefault(self.scheduler.bucket_for(r.prompt_len), r)
 
         # (bucket × batch-bucket) prefill grid: all-padding dummy batches
-        drop = self.cfg.num_slots                  # OOB slot ⇒ writes dropped
+        # (slot path: OOB slot index; paged path: all-sentinel page maps —
+        # either way every cache write is dropped)
+        drop = self.cfg.num_slots
         for w in sorted(seen):
             for bb in self.batch_buckets:
+                if self._paged:
+                    route = jnp.full((bb, -(-w // self.cfg.page_size)),
+                                     self.alloc.num_pages, jnp.int32)
+                else:
+                    route = jnp.full((bb,), drop, jnp.int32)
                 tok_dev, self.kv = self._prefill(
                     self.params, self.kv,
                     jnp.zeros((bb, w), jnp.int32),
                     jnp.ones((bb,), jnp.int32),
-                    jnp.full((bb,), drop, jnp.int32),
+                    route,
                     jnp.zeros((bb,), jnp.float32),
                     jnp.zeros((bb,), jnp.int32),
                     jnp.zeros((bb,), jnp.uint32))
-        if chunked:
-            # one dummy chunk compiles the (single) chunk program; the
-            # garbage it writes into slot 0 sits beyond every causal mask
-            # until the slot's next prefill overwrites it (engine is idle)
+        # a paged engine with prefix caching uses the chunk program for
+        # every prefix hit, not just beyond-largest-bucket prompts — warm
+        # it whenever a trace could hit it
+        if chunked or (self._paged and self.prefix is not None
+                       and (seen or chunked)):
+            # one dummy chunk compiles the (single) chunk program; on the
+            # slot path the garbage it writes into slot 0 sits beyond every
+            # causal mask until the slot's next prefill overwrites it (the
+            # engine is idle); on the paged path an all-sentinel table row
+            # drops the writes outright
+            route = (jnp.full((1, self.pages_per_slot), self.alloc.num_pages,
+                              jnp.int32) if self._paged else np.int32(0))
             tok_dev, self.kv = self._chunk(
                 self.params, self.kv, jnp.zeros((1, wmax), jnp.int32),
-                np.int32(0), np.int32(1), np.int32(0), np.float32(0.0),
+                np.int32(0), np.int32(1), route, np.float32(0.0),
                 np.int32(0), np.uint32(0))
 
         # end-to-end clones (decode program + host bookkeeping paths)
@@ -240,27 +381,50 @@ class Engine:
                 rid=wid, prompt=np.asarray([1], np.int32), max_new_tokens=2))
         real = [r for r in self.run() if r.rid >= 0]
         self._done.extend(real)        # unreachable under the idle guard
+        if self.prefix is not None:
+            # the clones seeded the prefix cache with warmup prompts —
+            # drop them so runtime hit/miss stats start clean and the
+            # first real admissions aren't served warmup pages
+            self.prefix.clear()
+        if self.alloc is not None:
+            assert self.alloc.pages_in_use == 0, \
+                f"warmup leaked {self.alloc.pages_in_use} pages"
         self._reset_counters()
         return self.compile_counts()
 
     def step(self) -> None:
         """Admit every admissible request (one batched prefill dispatch per
-        same-bucket FIFO head-run, chunked prefill for beyond-largest-bucket
-        prompts), then run one decode step for all slots."""
+        FIFO head-run, chunked prefill for beyond-largest-bucket prompts
+        and prefix-hit suffixes, page restoration for resume tickets), then
+        run one decode step for all slots."""
         sched = self.scheduler
-        while (batch := sched.admit_batch()) is not None:
-            if batch.chunked:
-                self._run_chunked(*batch.items[0])
-            else:
-                self._run_prefill_batch(batch)
+        if self._paged:
+            self._admit_paged()
+        else:
+            while (batch := sched.admit_batch(
+                    mixed=self.cfg.mixed_admission)) is not None:
+                if batch.chunked:
+                    self._run_chunked(*batch.items[0])
+                else:
+                    self._run_prefill_batch(batch)
 
         if sched.num_active == 0:
             return
-        tok_dev, self.kv = self._decode(
-            self.params, self.kv, jnp.asarray(self._pos),
-            jnp.asarray(self._tok[:, None]), jnp.asarray(self._temps),
-            jnp.asarray(self._topks), jnp.asarray(self._seeds),
-            jnp.asarray(self._steps))
+        if self._paged:
+            self._extend_for_decode()
+            if sched.num_active == 0:      # extension self-preempted all
+                return
+            tok_dev, self.kv = self._decode(
+                self.params, self.kv, jnp.asarray(self._pos),
+                jnp.asarray(self._tok[:, None]), jnp.asarray(self._temps),
+                jnp.asarray(self._topks), jnp.asarray(self._seeds),
+                jnp.asarray(self._steps), jnp.asarray(self._table))
+        else:
+            tok_dev, self.kv = self._decode(
+                self.params, self.kv, jnp.asarray(self._pos),
+                jnp.asarray(self._tok[:, None]), jnp.asarray(self._temps),
+                jnp.asarray(self._topks), jnp.asarray(self._seeds),
+                jnp.asarray(self._steps))
         toks = np.asarray(tok_dev)            # one int32 per slot per step
         now = time.perf_counter()
         self.decode_steps += 1
@@ -325,6 +489,244 @@ class Engine:
         self._record_first_token(slot, req, int(tok_dev),
                                  time.perf_counter())
 
+    # -- paged admission ---------------------------------------------------
+    def _set_table_row(self, slot: int, pages: List[int]) -> None:
+        row = self._table[slot]
+        row[:] = self.alloc.num_pages                # sentinel tail
+        row[:len(pages)] = pages
+
+    def _acquire_pages(self, n: int, seq: int,
+                       allow_preempt: bool) -> Optional[List[int]]:
+        """n pages, escalating when the pool is dry: evict unreferenced
+        prefix-cache entries first, then (tickets and decode extension
+        only) preempt the youngest request no older than ``seq``. None
+        when neither escalation can free enough — the caller waits."""
+        if n == 0:
+            return []
+        while True:
+            pages = self.alloc.alloc(n)
+            if pages is not None:
+                return pages
+            deficit = n - self.alloc.num_free
+            if self.prefix is not None and self.prefix.evict(deficit) > 0:
+                continue
+            if allow_preempt and self._preempt_youngest(seq):
+                continue
+            return None
+
+    def _preempt_youngest(self, seq: int) -> bool:
+        """Spill the youngest live request with seq >= ``seq`` (self-
+        preemption is legal: a decode extension may evict the requester
+        itself, which then resumes via its ticket). False when every live
+        request is strictly older — the oldest is never preempted, so it
+        always runs to completion and admission cannot livelock."""
+        victim, vseq = -1, -1
+        for slot in self.scheduler.active_slots():
+            s = self.scheduler.slots[slot].request.seq
+            if s >= seq and s > vseq:
+                victim, vseq = slot, s
+        if victim < 0:
+            return False
+        self._preempt(victim)
+        return True
+
+    def _preempt(self, slot: int) -> None:
+        """Spill a live slot's pages to host memory, requeue its ticket
+        (ordered by seq — ahead of every never-admitted request), release
+        its pages and park the slot. Prefix-cached pages keep their cache
+        reference: only the request's own references drop."""
+        sched = self.scheduler
+        state = sched.slots[slot]
+        pages = self._slot_pages[slot]
+        ticket = ResumeTicket(request=state.request,
+                              generated=state.generated,
+                              last_token=int(self._tok[slot]),
+                              pos=int(self._pos[slot]),
+                              n_pages=len(pages),
+                              payload=spill_pages(self.kv, pages))
+        sched.preempt(slot, ticket)
+        self.preemptions += 1
+        self.pages_spilled += len(pages)
+        self.alloc.decref(pages)
+        self._slot_pages[slot] = []
+        self._set_table_row(slot, [])
+        self._park(slot)
+
+    def _try_resume(self) -> bool:
+        """Head-of-queue ResumeTicket → fresh pages + restored payload.
+        The spilled bytes scatter back verbatim (raw storage round-trip),
+        so the resumed request's decode continues bit-identically. False
+        when blocked (no free slot, or pages unobtainable without
+        preempting a strictly-older request)."""
+        sched = self.scheduler
+        ticket = sched.peek()
+        if not sched.free:
+            return False
+        pages = self._acquire_pages(ticket.n_pages, ticket.seq,
+                                    allow_preempt=True)
+        if pages is None:
+            return False
+        slot, ticket = sched.admit_head()
+        self.kv = restore_pages(self.kv, pages, ticket.payload,
+                                self.alloc.num_pages)
+        self._slot_pages[slot] = pages
+        self._set_table_row(slot, pages)
+        sp = ticket.request.sampling
+        self._pos[slot] = ticket.pos
+        self._tok[slot] = ticket.last_token
+        self._temps[slot] = sp.temperature
+        self._topks[slot] = sp.top_k
+        self._seeds[slot] = np.uint32(sp.seed)
+        self._steps[slot] = ticket.generated   # sampling's fold_in counter
+        self.resumes += 1
+        return True
+
+    def _extend_for_decode(self) -> None:
+        """Back every live slot's next write position with a page before
+        the decode dispatch (a write through a sentinel entry would drop
+        the new token's K/V and corrupt the sampled output). Oldest-first,
+        preempting the youngest (possibly the requester itself) when the
+        pool is dry."""
+        sched = self.scheduler
+        pg = self.cfg.page_size
+        order = sorted(sched.active_slots(),
+                       key=lambda i: sched.slots[i].request.seq)
+        for slot in order:
+            state = sched.slots[slot]
+            if state is None:            # preempted by an older extension
+                continue
+            need = int(self._pos[slot]) // pg + 1
+            have = self._slot_pages[slot]
+            if need <= len(have):
+                continue
+            pages = self._acquire_pages(need - len(have), state.request.seq,
+                                        allow_preempt=True)
+            if pages is None or sched.slots[slot] is not state:
+                # the slot self-preempted while escalating (its ticket
+                # resumes later) — hand back anything grabbed after that
+                if pages is not None:
+                    self.alloc.decref(pages)
+                continue
+            have.extend(pages)
+            self._set_table_row(slot, have)
+
+    def _admit_paged(self) -> None:
+        """Paged admission, strictly FIFO. Plain bucket-size requests
+        accumulate into one right-padded prefill dispatch (``pending``);
+        prefix hits and beyond-largest-bucket prompts stream their
+        unmatched suffix through the chunk program; resume tickets restore
+        spilled pages, preempting strictly-younger live requests when the
+        pool is short. ``pending`` is always flushed before a resume can
+        preempt, so preemption victims are fully prefilled."""
+        sched = self.scheduler
+        pg = self.cfg.page_size
+        wmax = sched.buckets[-1]
+        pending: List[tuple] = []            # [(slot, req)], one dispatch
+        while sched.free:
+            head = sched.peek()
+            if head is None:
+                break
+            if isinstance(head, ResumeTicket):
+                self._flush_pending(pending)
+                if not self._try_resume():
+                    break
+                continue
+            req = head
+            matched, mtok = ([], 0)
+            if self.prefix is not None:
+                matched, mtok = self.prefix.match(req.prompt)
+            fresh = self._acquire_pages(-(-req.prompt_len // pg)
+                                        - len(matched),
+                                        req.seq, allow_preempt=False)
+            if fresh is None:
+                # head-of-line waits for pages (never preempts: everything
+                # live is older); roll back the prefix references
+                if matched:
+                    self.alloc.decref(matched)
+                break
+            if mtok:
+                self.prefix_hits += 1
+                self.prefix_hit_tokens += mtok
+            elif self.prefix is not None:
+                self.prefix_misses += 1
+            slot, _ = sched.admit_head()
+            pages = matched + fresh
+            self._slot_pages[slot] = pages
+            self._set_table_row(slot, pages)
+            if mtok or req.prompt_len > wmax:
+                # the flush writes any pending twin's pages before the
+                # chunk program reads the matched ones (in-order dispatch)
+                self._flush_pending(pending)
+                self._admit_stream(slot, req, mtok)
+            else:
+                if (pending and not self.cfg.mixed_admission
+                        and sched.bucket_for(req.prompt_len)
+                        != sched.bucket_for(pending[0][1].prompt_len)):
+                    self._flush_pending(pending)
+                pending.append((slot, req))
+            if self.prefix is not None:
+                self.prefix.insert(req.prompt, pages)
+        self._flush_pending(pending)
+
+    def _flush_pending(self, pending: List[tuple]) -> None:
+        """One right-padded prefill dispatch for the accumulated admission
+        run (the paged mirror of :meth:`_run_prefill_batch`; padding rows
+        carry all-sentinel page maps)."""
+        if not pending:
+            return
+        b = len(pending)
+        w = max(self.scheduler.bucket_for(r.prompt_len) for _, r in pending)
+        bb = next(x for x in self.batch_buckets if b <= x)
+        pg = self.cfg.page_size
+        sentinel = self.alloc.num_pages
+        tokens = np.zeros((bb, w), np.int32)
+        lengths = np.ones((bb,), np.int32)
+        maps = np.full((bb, -(-w // pg)), sentinel, np.int32)
+        temps = np.zeros((bb,), np.float32)
+        topks = np.zeros((bb,), np.int32)
+        seeds = np.zeros((bb,), np.uint32)
+        for i, (slot, req) in enumerate(pending):
+            tokens[i, :req.prompt_len] = req.prompt
+            lengths[i] = req.prompt_len
+            maps[i, :len(self._slot_pages[slot])] = self._slot_pages[slot]
+            sp = req.sampling
+            temps[i], topks[i] = sp.temperature, sp.top_k
+            seeds[i] = np.uint32(sp.seed)
+        tok_dev, self.kv = self._prefill(
+            self.params, self.kv, jnp.asarray(tokens), jnp.asarray(lengths),
+            jnp.asarray(maps), jnp.asarray(temps), jnp.asarray(topks),
+            jnp.asarray(seeds))
+        toks = np.asarray(tok_dev)
+        self.prefill_dispatches += 1
+        self.prefill_admitted += b
+        now = time.perf_counter()
+        for i, (slot, req) in enumerate(pending):
+            self._record_first_token(slot, req, int(toks[i]), now)
+        del pending[:]
+
+    def _admit_stream(self, slot: int, req: GenerationRequest,
+                      start_tok: int) -> None:
+        """Stream a prompt's unmatched suffix through the paged chunk
+        program, starting at the prefix-matched offset (0 for a plain
+        beyond-largest-bucket prompt). Only the final chunk's sample is
+        real; intermediate device results are never synced."""
+        w = self.scheduler.buckets[-1]
+        p, sp = req.prompt_len, req.sampling
+        table_row = jnp.asarray(self._table[slot:slot + 1])
+        tok_dev = None
+        for start in range(start_tok, p, w):
+            clen = min(w, p - start)
+            chunk = np.zeros((1, w), np.int32)
+            chunk[0, :clen] = req.prompt[start:start + clen]
+            tok_dev, self.kv = self._chunk(
+                self.params, self.kv, jnp.asarray(chunk), np.int32(start),
+                np.int32(clen), table_row, np.float32(sp.temperature),
+                np.int32(sp.top_k), np.uint32(sp.seed))
+            self.chunk_dispatches += 1
+        self.chunked_admitted += 1
+        self._record_first_token(slot, req, int(tok_dev),
+                                 time.perf_counter())
+
     def _record_first_token(self, slot: int, req: GenerationRequest,
                             tok: int, now: float) -> None:
         res = self._results[req.rid]
@@ -347,8 +749,18 @@ class Engine:
         res = self._results.pop(req.rid)
         res.t_finish = now
         self._done.append(res)
+        if self._paged:
+            # release the request's page references; prefix-cached pages
+            # keep their cache reference and survive for future matches
+            self.alloc.decref(self._slot_pages[slot])
+            self._slot_pages[slot] = []
+            self._set_table_row(slot, [])
+        self._park(slot)
+
+    def _park(self, slot: int) -> None:
         # park the freed slot: greedy token 0 at position 0, overwritten by
-        # the next admission's prefill before it is ever attended
+        # the next admission's prefill before it is ever attended (paged:
+        # the slot's all-sentinel table row drops its parked decode writes)
         self._pos[slot] = 0
         self._tok[slot] = 0
         self._temps[slot] = 0.0
@@ -374,7 +786,9 @@ class Engine:
         prompts; decode: 1). Flat across a post-warmup trace ⇔ no
         recompilation. ``None`` when the jit cache size is unavailable
         (private jax API moved) — callers must treat that as UNKNOWN, never
-        as "no recompilation"."""
+        as "no recompilation". The paged spill/restore gathers compile
+        lazily at the first preemption (O(log max_pages) programs, bounded
+        by the pow2 padding) and are not tracked here."""
         def size(f) -> Optional[int]:
             try:
                 return int(f._cache_size())
@@ -385,6 +799,27 @@ class Engine:
 
     def kv_cache_bytes(self) -> int:
         return cache_bytes(self.kv)
+
+    def page_stats(self) -> Dict[str, int]:
+        """Page-pool / prefix-reuse / preemption observability (paged
+        layout only; empty dict on the slot layout). Counters reset with
+        :meth:`warmup`."""
+        if not self._paged:
+            return {}
+        return {
+            "num_pages": self.alloc.num_pages,
+            "page_size": self.cfg.page_size,
+            "pages_in_use": self.alloc.pages_in_use,
+            "peak_pages_in_use": self.alloc.peak_in_use,
+            "prefix_cached_pages": (self.prefix.cached_pages
+                                    if self.prefix is not None else 0),
+            "prefix_hits": self.prefix_hits,
+            "prefix_misses": self.prefix_misses,
+            "prefix_hit_tokens": self.prefix_hit_tokens,
+            "preemptions": self.preemptions,
+            "resumes": self.resumes,
+            "pages_spilled": self.pages_spilled,
+        }
 
     def utilization(self) -> float:
         if self.decode_steps == 0:

@@ -234,6 +234,103 @@ def set_slot_rows(entry, slot, rows):
         entry, rows.astype(entry.dtype), slot, axis=1)
 
 
+# ---------------------------------------------------------------------------
+# paged storage (the block-table layout — serving/paging.py owns the
+# allocator/refcounts; this layer owns the device arrays and the scatters)
+# ---------------------------------------------------------------------------
+
+def init_paged_storage(model_cfg, num_pages: int, page_size: int,
+                       dtype=jnp.float32, quantized: bool = False,
+                       group_size: int = 0) -> dict:
+    """Fresh {"k", "v"} page pools: (L, P, page_size, Hk, D) storage.
+
+    Every page is allocatable (there is no pinned page); ``num_pages`` (the
+    value P itself) is the SENTINEL page index — block-table entries equal
+    to it drop writes (JAX scatter OOB semantics) and clip reads to the last
+    physical page, whose garbage is always causally masked or discarded.
+    Quantized pools carry per-(page, token, head, group) scales, so pages
+    move (spill/restore, prefix sharing) without any re-quantization."""
+    shape = (model_cfg.num_layers, num_pages, page_size,
+             model_cfg.num_kv_heads, model_cfg.resolved_head_dim)
+    if quantized:
+        g = group_size or model_cfg.resolved_head_dim
+        assert model_cfg.resolved_head_dim % g == 0, (shape, g)
+        k = QuantizedKV(
+            codes=jnp.zeros(shape, jnp.uint8),
+            scale=jnp.full(shape[:-1] + (shape[-1] // g,), 1e-4, jnp.float16),
+            zero=jnp.zeros(shape[:-1] + (shape[-1] // g,), jnp.float16),
+            group_size=g)
+        v = QuantizedKV(jnp.zeros_like(k.codes), jnp.full_like(k.scale, 1e-4),
+                        jnp.zeros_like(k.zero), g)
+    else:
+        k = jnp.zeros(shape, dtype)
+        v = jnp.zeros(shape, dtype)
+    return {"k": k, "v": v}
+
+
+def write_pages(kv: dict, page_map, k_new: jax.Array, v_new: jax.Array,
+                page_size: int) -> dict:
+    """Splice B freshly prefilled (L, B, W, Hk, D) mini-caches into the page
+    pools through per-row page maps — the paged mirror of :func:`write_slot`.
+
+    ``page_map``: (B, ceil(W/page_size)) int32 physical page per page-column
+    of each row. Entries equal to the sentinel (== num_pages) drop their
+    whole page column — batch-bucket padding rows carry all-sentinel maps,
+    and a row's map holds exactly ceil(prompt_len/page_size) live pages, so
+    the bucket-padded tail past the last allocated page is dropped (the
+    garbage inside the last live page is overwritten by decode writes in
+    position order before it is ever attended, as on the slot path)."""
+    out = dict(kv)
+    w = k_new.shape[2]
+    pidx = jnp.arange(w) // page_size                   # (W,) static
+    offs = jnp.arange(w) % page_size
+    for name, new in (("k", k_new), ("v", v_new)):
+        entry = kv[name]
+        pages = page_map[:, pidx]                       # (B, W)
+        off = jnp.broadcast_to(offs[None, :], pages.shape)
+        if isinstance(entry, QuantizedKV):
+            q = kv_quantize(new, entry.group_size)
+            entry = QuantizedKV(
+                entry.codes.at[:, pages, off].set(q.codes),
+                entry.scale.at[:, pages, off].set(q.scale),
+                entry.zero.at[:, pages, off].set(q.zero),
+                entry.group_size)
+        else:
+            entry = entry.at[:, pages, off].set(new.astype(entry.dtype))
+        out[name] = entry
+    return out
+
+
+def paged_view(entry, table):
+    """Gather each block-table row's pages into a contiguous per-request
+    view: per-layer pool (P, page, Hk, D) + table (B, n_pages) →
+    (B, n_pages·page, Hk, D). Sentinel table entries clip to the last
+    physical page — those positions are strictly beyond every live query's
+    causal mask, so the view attends identically to a slot-cache row."""
+    def gather(pool):
+        b, npg = table.shape
+        g = pool[table]                                 # (B, npg, page, ...)
+        return g.reshape(b, npg * pool.shape[1], *pool.shape[2:])
+    if isinstance(entry, QuantizedKV):
+        return QuantizedKV(gather(entry.codes), gather(entry.scale),
+                           gather(entry.zero), entry.group_size)
+    return gather(entry)
+
+
+def take_pages(entry, pages):
+    """Gather whole pages across all layers: (L, P, page, …) + (N,) int32 →
+    (L, N, page, …). The spill path (preemption) reads through this."""
+    return jax.tree.map(lambda a: jnp.take(a, pages, axis=1), entry)
+
+
+def put_pages(entry, pages, rows):
+    """Scatter whole-page payloads (from :func:`take_pages`) back into the
+    pool at ``pages``; sentinel indices drop (the pow2 padding convention
+    of the spill/restore helpers)."""
+    return jax.tree.map(lambda a, r: a.at[:, pages].set(r.astype(a.dtype)),
+                        entry, rows)
+
+
 def cache_bytes(cache: dict) -> int:
     """Resident bytes of the K/V storage (excludes the tiny pos vector)."""
     total = 0
@@ -248,4 +345,5 @@ def cache_bytes(cache: dict) -> int:
 
 __all__ = ["QuantizedKV", "KVCacheConfig", "init_slot_cache", "write_slot",
            "slot_rows", "set_slot_rows", "cache_bytes", "kv_quantize",
-           "kv_dequantize", "kv_update"]
+           "kv_dequantize", "kv_update", "init_paged_storage", "write_pages",
+           "paged_view", "take_pages", "put_pages"]

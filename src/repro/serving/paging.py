@@ -1,0 +1,152 @@
+"""Page-pool bookkeeping for the paged KV cache.
+
+The paged engine replaces per-slot contiguous cache rows with a fixed pool
+of ``num_pages`` pages of ``page_size`` tokens each (storage in
+``serving/kv_cache.py``: ``(L, P, page, Hk, D)`` dense or INT8
+:class:`~repro.serving.kv_cache.QuantizedKV` with per-page scales). Each
+live request owns a *block table* — a host-side list of physical page
+indices covering its token positions — and the device only ever sees those
+tables as plain int32 arrays, so page indirection never changes compiled
+shapes.
+
+This module is the host side of that design:
+
+- :class:`PageAllocator` — a free-list allocator with per-page refcounts.
+  A page is held by the request(s) whose block tables contain it and,
+  for full prompt pages, by the prefix cache
+  (:class:`~repro.serving.prefix_cache.PrefixCache`); it returns to the
+  free list when the last reference drops. Double-free and
+  incref-after-free raise — the invariants the paging tests pin down.
+- :func:`spill_pages` / :func:`restore_pages` — preemption support: gather
+  a victim's pages to host memory (one jitted gather per pow2-padded page
+  count, so the rare preemption path compiles O(log max_pages) programs,
+  never per request) and scatter them back into freshly allocated pages on
+  resume. Payloads round-trip raw storage (INT8 codes+scales move as-is),
+  so a resumed request's cache contents are bit-identical to pre-spill.
+
+Sentinel convention (shared with kv_cache / the engine): page index
+``num_pages`` marks an unallocated block-table entry. Writes to it are
+dropped by JAX scatter OOB semantics; reads clip to the last physical page
+and are always causally masked or discarded.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.kv_cache import put_pages, take_pages
+
+
+def pow2_at_least(n: int) -> int:
+    """Smallest power of two >= n (1 for n <= 1)."""
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+class PageAllocator:
+    """Free-list page allocator with refcounts. Pure host bookkeeping —
+    the device pool itself lives in the engine's kv dict."""
+
+    def __init__(self, num_pages: int):
+        if num_pages < 1:
+            raise ValueError(f"page pool needs >= 1 page, got {num_pages}")
+        self.num_pages = num_pages          # also the sentinel index
+        self._free: deque = deque(range(num_pages))
+        self._refs: Dict[int, int] = {}     # page -> refcount (live pages)
+        self.peak_in_use = 0
+
+    # -- queries -----------------------------------------------------------
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def refcount(self, page: int) -> int:
+        """0 for free pages."""
+        return self._refs.get(page, 0)
+
+    # -- alloc/free --------------------------------------------------------
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Pop n pages (refcount 1 each), or None if the pool is short —
+        the caller escalates (evict prefix entries, preempt a request)."""
+        if n > len(self._free):
+            return None
+        pages = [self._free.popleft() for _ in range(n)]
+        for p in pages:
+            self._refs[p] = 1
+        self.peak_in_use = max(self.peak_in_use, self.pages_in_use)
+        return pages
+
+    def incref(self, pages) -> None:
+        for p in pages:
+            if p not in self._refs:
+                raise ValueError(f"incref on free page {p}")
+            self._refs[p] += 1
+
+    def decref(self, pages) -> int:
+        """Drop one reference per page; pages reaching zero return to the
+        free list. Returns the number of pages actually freed."""
+        freed = 0
+        for p in pages:
+            rc = self._refs.get(p)
+            if rc is None:
+                raise ValueError(f"double free of page {p}")
+            if rc == 1:
+                del self._refs[p]
+                self._free.append(p)
+                freed += 1
+            else:
+                self._refs[p] = rc - 1
+        return freed
+
+
+# ---------------------------------------------------------------------------
+# preemption spill/restore (pow2-padded page counts bound the compile set)
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def _gather_pages_jit(entry, pages):
+    return take_pages(entry, pages)
+
+
+@jax.jit
+def _scatter_pages_jit(entry, pages, rows):
+    return put_pages(entry, pages, rows)
+
+
+def spill_pages(kv: dict, pages: List[int]) -> dict:
+    """Gather ``pages`` of both pools to host memory → payload dict.
+
+    The page list is padded to a power of two (with page 0 — a harmless
+    duplicate read), so the jitted gather compiles once per pow2 count.
+    The payload keeps the padded shape; :func:`restore_pages` drops the
+    padding through sentinel scatter indices."""
+    n = pow2_at_least(len(pages))
+    padded = np.zeros(n, np.int32)
+    padded[:len(pages)] = pages
+    idx = jnp.asarray(padded)
+    return {name: jax.device_get(_gather_pages_jit(kv[name], idx))
+            for name in ("k", "v")}
+
+
+def restore_pages(kv: dict, pages: List[int], payload: dict,
+                  num_pages: int) -> dict:
+    """Scatter a spilled payload into freshly allocated ``pages`` (same
+    count as at spill time); the pow2 padding lanes carry the sentinel
+    index and are dropped."""
+    n = next(iter(jax.tree.leaves(payload["k"]))).shape[1]
+    assert n == pow2_at_least(len(pages)), (n, len(pages))
+    padded = np.full(n, num_pages, np.int32)
+    padded[:len(pages)] = pages
+    idx = jnp.asarray(padded)
+    return {name: _scatter_pages_jit(kv[name], idx, payload[name])
+            for name in ("k", "v")}
+
+
+__all__ = ["PageAllocator", "pow2_at_least", "spill_pages", "restore_pages"]

@@ -6,15 +6,21 @@ scheduler *what* to run; every device-facing decision that would change
 compiled shapes goes through :func:`Scheduler.bucket_for` (prompt-length
 bucketing), so the step functions compile once per bucket and never again.
 
-Invariants (tested in tests/test_engine.py):
+Invariants (tested in tests/test_engine.py and tests/test_paging.py):
 - admission is FIFO: requests start in submit order (``admit_batch`` pops
-  the longest head-run sharing one prompt bucket — it never skips over a
-  request whose bucket differs);
+  the FIFO head-run — by default the longest run sharing one prompt
+  bucket; ``mixed=True`` crosses buckets and right-pads the run to its
+  largest member's bucket — it never skips over a queued request);
 - a slot is EXCLUSIVE: never two live requests on one slot;
 - retire frees the slot for reuse within the same run;
 - a request is admitted only if prompt_len + max_new_tokens fits max_len
   and it decodes at least one token (max_new_tokens >= 1);
-- a prompt longer than the largest bucket admits alone (chunked prefill).
+- a prompt longer than the largest bucket admits alone (chunked prefill);
+- priority is submission order (``seq``): preemption (the paged engine)
+  always victimizes the YOUNGEST live request, and a preempted request's
+  :class:`ResumeTicket` re-enters the queue ordered by seq — ahead of
+  every never-admitted request, behind older tickets — so the oldest
+  request can never be starved.
 """
 from __future__ import annotations
 
@@ -30,12 +36,15 @@ from repro.serving.sampling import SamplingParams
 @dataclasses.dataclass
 class GenerationRequest:
     """One generation job: prompt tokens + decode budget + sampling policy.
-    ``eos_id < 0`` disables early stopping (the synthetic-corpus default)."""
+    ``eos_id < 0`` disables early stopping (the synthetic-corpus default).
+    ``seq`` is the scheduler-assigned admission priority (submit order,
+    lower = older = higher priority); callers leave it at -1."""
     rid: int
     prompt: np.ndarray                 # (prompt_len,) int32
     max_new_tokens: int
     sampling: SamplingParams = SamplingParams()
     eos_id: int = -1
+    seq: int = -1
 
     @property
     def prompt_len(self) -> int:
@@ -73,6 +82,26 @@ class SlotState:
     @property
     def done(self) -> bool:
         return self.generated >= self.request.max_new_tokens
+
+
+@dataclasses.dataclass
+class ResumeTicket:
+    """A preempted request's host-side state, queued for re-admission.
+
+    The engine fills it at preemption (spilled page payloads + decode
+    cursor) and consumes it on resume; the scheduler only orders it
+    (by ``seq``) and re-binds it to a slot. ``payload`` is engine-opaque
+    (the pow2-padded spilled page bytes of both pools)."""
+    request: GenerationRequest
+    generated: int                     # tokens sampled before preemption
+    last_token: int                    # next decode input token
+    pos: int                           # next cache write position
+    n_pages: int                       # live pages at spill time
+    payload: object = None
+
+    @property
+    def seq(self) -> int:
+        return self.request.seq
 
 
 @dataclasses.dataclass
@@ -115,9 +144,10 @@ class Scheduler:
                 f"largest prompt bucket {self.buckets[-1]} exceeds max_len "
                 f"{max_len}: the bucket-padded prefill would write past the "
                 f"slot cache edge")
-        self.queue: Deque[GenerationRequest] = deque()
+        self.queue: Deque = deque()        # GenerationRequest | ResumeTicket
         self.free: Deque[int] = deque(range(num_slots))
         self.slots: List[Optional[SlotState]] = [None] * num_slots
+        self._seq = 0                      # monotone admission priority
 
     # -- admission ---------------------------------------------------------
     def submit(self, req: GenerationRequest) -> None:
@@ -133,19 +163,69 @@ class Scheduler:
             raise ValueError(f"request {req.rid}: empty prompt")
         # prompts beyond the largest bucket are fine: they admit alone and
         # stream through the chunked prefill (see admit_batch)
+        req.seq = self._seq
+        self._seq += 1
         self.queue.append(req)
 
     def admit(self) -> Optional[tuple]:
         """Pop the FIFO head onto a free slot → (slot, request), or None."""
         if not self.queue or not self.free:
             return None
+        assert not isinstance(self.queue[0], ResumeTicket), \
+            "resume tickets re-admit through admit_head (engine restores " \
+            "spilled pages); admit() only handles fresh requests"
         slot = self.free.popleft()
         req = self.queue.popleft()
         assert self.slots[slot] is None, f"slot {slot} double-booked"
         self.slots[slot] = SlotState(request=req)
         return slot, req
 
-    def admit_batch(self) -> Optional[AdmittedBatch]:
+    def peek(self):
+        """The queue head (GenerationRequest or ResumeTicket), or None."""
+        return self.queue[0] if self.queue else None
+
+    def admit_head(self) -> Optional[tuple]:
+        """Pop the FIFO head — request *or* resume ticket — onto a free
+        slot → (slot, head). Tickets rebind with their pre-preemption
+        decode progress; the engine restores their pages/pos/token."""
+        if not self.queue or not self.free:
+            return None
+        slot = self.free.popleft()
+        head = self.queue.popleft()
+        assert self.slots[slot] is None, f"slot {slot} double-booked"
+        if isinstance(head, ResumeTicket):
+            self.slots[slot] = SlotState(request=head.request,
+                                         generated=head.generated)
+        else:
+            self.slots[slot] = SlotState(request=head)
+        return slot, head
+
+    def requeue(self, ticket: ResumeTicket) -> None:
+        """Re-enter a preempted request, ordered by seq: behind any older
+        tickets already waiting, ahead of everything never admitted (all
+        plain queued requests have larger seq — they were submitted after
+        the ticket's request was already running)."""
+        at = 0
+        for item in self.queue:
+            if isinstance(item, ResumeTicket) and item.seq < ticket.seq:
+                at += 1
+            else:
+                break
+        self.queue.insert(at, ticket)
+
+    def preempt(self, slot: int, ticket: ResumeTicket) -> SlotState:
+        """Evict a live slot and requeue its ticket. The engine builds the
+        ticket (spilled pages + decode cursor) before calling this."""
+        state = self.slots[slot]
+        assert state is not None, f"preempting empty slot {slot}"
+        assert state.request is ticket.request, \
+            f"ticket/slot mismatch on slot {slot}"
+        self.slots[slot] = None
+        self.free.append(slot)
+        self.requeue(ticket)
+        return state
+
+    def admit_batch(self, mixed: bool = False) -> Optional[AdmittedBatch]:
         """Pop the longest FIFO head-run sharing one prompt bucket onto
         free slots — one batched prefill dispatch admits the whole run.
 
@@ -153,16 +233,35 @@ class Scheduler:
         it streams through the bucket-width program chunk by chunk. FIFO
         order is preserved strictly — the run stops at the first queued
         request whose bucket differs (never skips over it) or when the
-        free-list empties. Returns None when nothing is admissible."""
+        free-list empties. With ``mixed=True`` the run crosses buckets:
+        it pops the head-run of every in-bucket request and dispatches one
+        prefill right-padded to the LARGEST member's bucket (causal masking
+        plus per-row lengths make the padding inert), collapsing a
+        short/long interleave into one dispatch instead of one per bucket
+        flip. Returns None when nothing is admissible.
+
+        Resume tickets are never popped here — the caller drains them via
+        :meth:`admit_head` (they need page restoration, not prefill)."""
         if not self.queue or not self.free:
+            return None
+        if isinstance(self.queue[0], ResumeTicket):
             return None
         wmax = self.buckets[-1]
         if self.queue[0].prompt_len > wmax:
             return AdmittedBatch(bucket=wmax, items=[self.admit()],
                                  chunked=True)
-        bucket = self.bucket_for(self.queue[0].prompt_len)
         items = []
+        if mixed:
+            bucket = 0
+            while (self.queue and self.free
+                   and not isinstance(self.queue[0], ResumeTicket)
+                   and self.queue[0].prompt_len <= wmax):
+                bucket = max(bucket, self.bucket_for(self.queue[0].prompt_len))
+                items.append(self.admit())
+            return AdmittedBatch(bucket=bucket, items=items)
+        bucket = self.bucket_for(self.queue[0].prompt_len)
         while (self.queue and self.free
+               and not isinstance(self.queue[0], ResumeTicket)
                and self.queue[0].prompt_len <= wmax
                and self.bucket_for(self.queue[0].prompt_len) == bucket):
             items.append(self.admit())
@@ -197,4 +296,4 @@ class Scheduler:
 
 
 __all__ = ["AdmittedBatch", "GenerationRequest", "GenerationResult",
-           "SlotState", "Scheduler", "default_buckets"]
+           "ResumeTicket", "SlotState", "Scheduler", "default_buckets"]

@@ -182,6 +182,29 @@ def test_pgd_batched_matches_sequential_per_item(rng):
     assert len(set(iters.tolist())) > 1, "want distinct convergence counts"
 
 
+@pytest.mark.parametrize("nm", [None, (2, 4)])
+def test_prune_batched_compacted_matches_monolithic(rng, nm):
+    """Chunked PGD with between-chunk compaction of converged items must be
+    bit-identical to the monolithic batched run: the projection is
+    step-index-free, so restarting the loop per chunk (and re-stacking the
+    survivors) leaves every item's trajectory untouched."""
+    b, d_out, d_in, k = 5, 12, 16, 8
+    w_b = jnp.asarray(rng.normal(size=(b, d_out, d_in)), jnp.float32)
+    x = rng.normal(size=(b, 128, d_in)).astype(np.float32)
+    x[1] *= 1e-4                   # converges in O(1) iters → compacted out
+    x[3][:, 6:] = 0.0              # low-rank: also retires early
+    c_b = jnp.asarray(np.einsum("bti,btj->bij", x, x) / 128)
+
+    ref = batched.prune_batched(w_b, c_b, k, nm=nm, use_pallas=False)
+    got = batched.prune_batched_compacted(w_b, c_b, k, nm=nm,
+                                          chunk_iters=25, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(got.theta), np.asarray(ref.theta))
+    np.testing.assert_array_equal(np.asarray(got.iters), np.asarray(ref.iters))
+    np.testing.assert_array_equal(np.asarray(got.grad_norm),
+                                  np.asarray(ref.grad_norm))
+    assert len(set(np.asarray(got.iters).tolist())) > 1
+
+
 def test_quantize_batched_matches_sequential(rng):
     b, d_out, d_in = 4, 8, 32
     w_b = jnp.asarray(rng.normal(size=(b, d_out, d_in)), jnp.float32)

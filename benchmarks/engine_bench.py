@@ -18,9 +18,16 @@ ride along:
 - **shared_prefix** — a Zipf trace behind one shared system prefix on the
   PAGED engine: repeat prefixes admit copy-free off the prefix cache
   (reports hit rate and prompt tokens reused), parity-checked;
-- **overload** — an oversubscribed page pool: decode extension preempts
-  the youngest request (pages spill to host) and resumes it later, with
-  every request — preempted ones included — still bit-identical.
+- **overload** — an oversubscribed page pool behind a bounded queue
+  (``max_queue``): decode extension preempts the youngest request (pages
+  spill to host) and resumes it later, the burst tail sheds with a
+  ``rejected`` status, queue depth over time lands in the JSON, and every
+  completed request — preempted ones included — stays bit-identical;
+- **chaos** — the overload trace under a seeded ``FaultPlan`` (injected
+  allocation + spill/restore failures) with a mid-flight cancel:
+  ``check_invariants()`` is asserted after every step, every request ends
+  terminal, the pool drains to zero, and each ``ok`` survivor's output is
+  bit-identical to a fault-free run of the same trace.
 
 The main dense/int8 slot rows are joined by ``paged_dense``/``paged_int8``
 rows (same trace through the paged pool) carrying ``page_stats``.
@@ -48,23 +55,32 @@ from repro.serving import Engine, EngineConfig
 
 
 def run_engine(model, params, cfg, ecfg: EngineConfig, reqs):
-    """One warmed engine pass over the trace → metrics dict."""
+    """One warmed engine pass over the trace → metrics dict. Submission
+    goes through ``try_submit``, so with ``max_queue`` set the shed
+    requests land in the results as ``rejected`` (and in ``statuses``)
+    instead of raising; latency percentiles cover completed requests."""
     engine = Engine(model, params, ecfg)
     compiled_warm = engine.warmup(reqs)
 
     t0 = time.perf_counter()
     for r in reqs:
-        engine.submit(r)
+        engine.try_submit(r)
     results = engine.run()
     wall = time.perf_counter() - t0
 
-    lats = sorted(r.latency for r in results)
-    ttfts = sorted(r.ttft for r in results)
+    done = [r for r in results if r.ok]
+    statuses = {}
+    for r in results:
+        statuses[r.status] = statuses.get(r.status, 0) + 1
+    lats = sorted(r.latency for r in done) or [0.0]
+    ttfts = sorted(r.ttft for r in done) or [0.0]
     n_tok = sum(len(r.tokens) for r in results)
     compiled = dict(engine.compile_counts())
     counts_known = all(v is not None for v in compiled.values())
+    qs = engine.queue_stats()
     return {
         "requests": len(results),
+        "statuses": statuses,
         "generated_tokens": n_tok,
         "wall_s": wall,
         "tok_per_s": n_tok / wall,
@@ -78,6 +94,9 @@ def run_engine(model, params, cfg, ecfg: EngineConfig, reqs):
         "prefill_admitted": engine.prefill_admitted,
         "chunk_dispatches": engine.chunk_dispatches,
         "chunked_admitted": engine.chunked_admitted,
+        "queue_depth_peak": qs["peak"],
+        "queue_depth_mean": qs["mean"],
+        "rejected": qs["rejected"],
         "compiled_programs": compiled,
         # None = jit cache sizes unavailable (UNKNOWN, not "no recompile")
         "recompiled_after_warmup": (compiled != compiled_warm
@@ -191,35 +210,149 @@ def shared_prefix_scenario(model, params, cfg, *, slots, requests, seed=3):
     return row
 
 
-def overload_scenario(model, params, cfg, *, requests=8, seed=4):
-    """Page-pool oversubscription (num_pages well below slots' worst case):
-    decode extension must preempt the youngest request, spill its pages to
-    host, and resume it later — with greedy output still bit-identical to
-    the static path for every request, preempted ones included."""
+def _overload_requests(cfg, requests, gen, seed):
     from repro.serving import GenerationRequest, SamplingParams
-    pg, max_len, gen, slots, num_pages = 8, 48, 12, 3, 9
     rng = np.random.default_rng(seed)
-    reqs = [GenerationRequest(
+    return [GenerationRequest(
                 rid=i,
                 prompt=rng.integers(1, cfg.vocab_size,
                                     size=int(28 + i % 4)).astype(np.int32),
                 max_new_tokens=gen, sampling=SamplingParams())
             for i in range(requests)]
+
+
+def overload_scenario(model, params, cfg, *, requests=8, max_queue=6,
+                      seed=4):
+    """Page-pool oversubscription (num_pages well below slots' worst case)
+    PLUS a bounded queue: decode extension must preempt the youngest
+    request, spill its pages to host, and resume it later — while the
+    tail of the burst sheds at ``max_queue`` with a ``rejected`` status.
+    Greedy output stays bit-identical to the static path for every
+    completed request, preempted ones included; queue depth over time
+    rides along in the row."""
+    pg, max_len, gen, slots, num_pages = 8, 48, 12, 3, 9
+    reqs = _overload_requests(cfg, requests, gen, seed)
     ecfg = EngineConfig(num_slots=slots, max_len=max_len,
                         kv_dtype=jnp.float32, kv_layout="paged",
                         page_size=pg, num_pages=num_pages,
-                        prefix_caching=False)
-    row, results = run_engine(model, params, cfg, ecfg, reqs)
+                        prefix_caching=False, max_queue=max_queue)
+    engine = Engine(model, params, ecfg)
+    engine.warmup(reqs)
+    t0 = time.perf_counter()
+    shed = [r.rid for r in reqs if not engine.try_submit(r)]
+    results = engine.run()
+    wall = time.perf_counter() - t0
+    row, _ = _result_row(engine, results, wall)
     ps = row["page_stats"]
-    row.update(num_pages=num_pages, page_size=pg,
-               pool_utilization=ps["peak_pages_in_use"] / num_pages)
+    row.update(num_pages=num_pages, page_size=pg, max_queue=max_queue,
+               pool_utilization=ps["peak_pages_in_use"] / num_pages,
+               queue_depth_trace=engine.queue_stats()["trace"])
     assert ps["preemptions"] > 0 and ps["resumes"] > 0, \
         "oversubscribed pool must preempt"
     assert ps["peak_pages_in_use"] <= num_pages
-    # every request — including preempted-and-resumed ones — stays exact
-    n = check_parity(model, params, reqs, results, max_len, requests,
-                     step_fns=make_step_fns(model))
+    assert len(shed) == max(0, requests - max_queue), \
+        "every submit past max_queue must shed"
+    assert row["queue_depth_peak"] <= max_queue
+    # every completed request — preempted-and-resumed ones included —
+    # stays exact; the shed tail never ran
+    survivors = [r for r in reqs if r.rid not in shed]
+    n = check_parity(model, params, survivors, results, max_len,
+                     len(survivors), step_fns=make_step_fns(model))
     row["parity_checked"] = n
+    return row
+
+
+def _result_row(engine, results, wall):
+    """Shared row shape for the stepwise-driven scenarios (overload/chaos);
+    mirrors run_engine's metrics without re-submitting."""
+    done = [r for r in results if r.ok]
+    statuses = {}
+    for r in results:
+        statuses[r.status] = statuses.get(r.status, 0) + 1
+    lats = sorted(r.latency for r in done) or [0.0]
+    n_tok = sum(len(r.tokens) for r in results)
+    qs = engine.queue_stats()
+    return {
+        "requests": len(results),
+        "statuses": statuses,
+        "generated_tokens": n_tok,
+        "wall_s": wall,
+        "tok_per_s": n_tok / max(wall, 1e-9),
+        "latency_p50_ms": 1e3 * lats[len(lats) // 2],
+        "slot_utilization": engine.utilization(),
+        "queue_depth_peak": qs["peak"],
+        "queue_depth_mean": qs["mean"],
+        "rejected": qs["rejected"],
+        **({"page_stats": ps} if (ps := engine.page_stats()) else {}),
+    }, results
+
+
+def chaos_scenario(model, params, cfg, *, requests=8, seed=5):
+    """Overload + injected faults (the acceptance scenario from the
+    lifecycle-hardening work): a seeded FaultPlan fires allocation
+    failures and spill/restore failures into the oversubscribed paged
+    pool while the queue sheds at ``max_queue`` and one request is
+    cancelled mid-flight. The engine must stay failure-atomic —
+    ``check_invariants()`` holds after EVERY step, every request reaches
+    a terminal status, the pool drains to zero — and every ``ok``
+    survivor's output is bit-identical to a fault-free run of the same
+    trace."""
+    from repro.serving import FaultPlan
+    pg, max_len, gen, slots, num_pages = 8, 48, 12, 3, 9
+    max_queue = 6
+    ecfg = EngineConfig(num_slots=slots, max_len=max_len,
+                        kv_dtype=jnp.float32, kv_layout="paged",
+                        page_size=pg, num_pages=num_pages,
+                        prefix_caching=False, max_queue=max_queue)
+
+    def drive(faults, cancel_after=-1):
+        engine = Engine(model, params, ecfg)
+        reqs = _overload_requests(cfg, requests, gen, seed)
+        engine.warmup(reqs)
+        if faults is not None:
+            engine.set_faults(faults)
+        t0 = time.perf_counter()
+        shed = [r.rid for r in reqs if not engine.try_submit(r)]
+        cancelled, steps = -1, 0
+        while not engine.scheduler.idle:
+            engine.step()
+            steps += 1
+            engine.check_invariants()           # after EVERY step
+            if cancelled < 0 and 0 <= cancel_after <= engine.decode_steps:
+                live = engine.scheduler.active_slots()
+                if live:
+                    cancelled = engine.scheduler.slots[live[-1]].request.rid
+                    assert engine.cancel(cancelled)
+                    engine.check_invariants()
+            assert steps < 5000, "chaos drive runaway"
+        wall = time.perf_counter() - t0
+        results, engine._done = list(engine._done), []
+        assert engine.alloc.pages_in_use == 0, "chaos leaked pages"
+        return engine, reqs, shed, cancelled, results, wall
+
+    _, base_reqs, base_shed, _, base_results, _ = drive(None)
+    baseline = {r.rid: r.tokens for r in base_results if r.ok}
+
+    plan = FaultPlan(seed=11, alloc_fail=0.15, spill_fail=0.3)
+    engine, reqs, shed, cancelled, results, wall = drive(plan,
+                                                         cancel_after=3)
+    row, _ = _result_row(engine, results, wall)
+    row.update(fault_plan={"seed": plan.seed, "alloc_fail": plan.alloc_fail,
+                           "spill_fail": plan.spill_fail},
+               faults_fired=dict(plan.fired), max_queue=max_queue,
+               cancelled_rid=cancelled,
+               queue_depth_trace=engine.queue_stats()["trace"])
+    assert shed == base_shed                     # shedding is deterministic
+    assert {r.rid for r in results} == {r.rid for r in reqs}, \
+        "every request must reach a terminal status"
+    survivors = 0
+    for r in results:
+        if r.ok:
+            assert r.tokens == baseline[r.rid], \
+                f"chaos survivor rid={r.rid} diverged from fault-free run"
+            survivors += 1
+    row["parity_checked"] = survivors
+    assert survivors > 0
     return row
 
 
@@ -317,7 +450,18 @@ def main():
           f"{ops['peak_pages_in_use']}): {ops['preemptions']} preemptions, "
           f"{ops['resumes']} resumes, {ops['pages_spilled']} pages spilled, "
           f"pool util {overload['pool_utilization']:.2f}, "
+          f"queue peak {overload['queue_depth_peak']} "
+          f"(max_queue {overload['max_queue']}, "
+          f"{overload['rejected']} shed), "
           f"parity {overload['parity_checked']} reqs")
+
+    chaos = chaos_scenario(model, params, cfg)
+    cps = chaos["page_stats"]
+    print(f"  chaos (seeded faults {chaos['faults_fired']}): "
+          f"statuses {chaos['statuses']}, {cps['preemptions']} preemptions, "
+          f"{chaos['rejected']} shed, cancel rid={chaos['cancelled_rid']}, "
+          f"invariants held every step, "
+          f"parity {chaos['parity_checked']} survivors")
 
     lp_buckets = (8, args.max_prompt // 2)
     longp = long_prompt_scenario(model, params, cfg, slots=args.slots,
@@ -337,7 +481,7 @@ def main():
         "dense": rows["dense"], "int8": rows["int8"],
         "paged_dense": rows["paged_dense"], "paged_int8": rows["paged_int8"],
         "burst": burst, "long_prompt": longp,
-        "shared_prefix": shared, "overload": overload,
+        "shared_prefix": shared, "overload": overload, "chaos": chaos,
         "kv_compression_x": ratio,
     })
     print(f"wrote {out}")

@@ -196,18 +196,23 @@ def static_greedy_reference(model, params, req, max_len,
     return out
 
 
-def _verify_against_static(model, params, reqs, results, max_len) -> int:
+def _verify_against_static(model, params, reqs, results, max_len) -> tuple:
     """Greedy engine outputs must be bit-identical to the static path run
-    per request (same cache length). Returns the mismatch count."""
+    per request (same cache length). Requests that never completed —
+    shed at --max-queue, cancelled, errored — have no reference to match
+    and are skipped. Returns the mismatch count."""
     step_fns = make_step_fns(model)
-    by_rid = {r.rid: r.tokens for r in results}
-    bad = 0
+    by_rid = {r.rid: r.tokens for r in results if r.ok}
+    bad = checked = 0
     for req in reqs:
+        if req.rid not in by_rid:
+            continue
+        checked += 1
         ref = static_greedy_reference(model, params, req, max_len, step_fns)
         if by_rid[req.rid] != ref:
             bad += 1
             print(f"[serve]   MISMATCH rid={req.rid}: {by_rid[req.rid]} != {ref}")
-    return bad
+    return bad, checked
 
 
 def _serve_engine(args, cfg, model, params):
@@ -228,7 +233,8 @@ def _serve_engine(args, cfg, model, params):
                         page_size=args.page_size,
                         num_pages=args.pages,
                         prefix_caching=not args.no_prefix_cache,
-                        mixed_admission=args.mixed_admission)
+                        mixed_admission=args.mixed_admission,
+                        max_queue=args.max_queue)
     engine = Engine(model, params, ecfg)
     reqs = build_trace(cfg, num_requests=args.requests,
                        max_prompt=min(args.prompt_len, max_len - args.gen),
@@ -238,17 +244,26 @@ def _serve_engine(args, cfg, model, params):
 
     t0 = time.time()
     for r in reqs:
-        engine.submit(r)
+        engine.try_submit(r)           # --max-queue sheds, never raises
     results = engine.run()
     wall = time.time() - t0
     after = engine.compile_counts()
 
+    done = [r for r in results if r.ok]
+    statuses = {}
+    for r in results:
+        statuses[r.status] = statuses.get(r.status, 0) + 1
     n_tok = sum(len(r.tokens) for r in results)
-    lats = sorted(r.latency for r in results)
+    lats = sorted(r.latency for r in done) or [0.0]
     p50 = lats[len(lats) // 2]
     p99 = lats[min(len(lats) - 1, int(len(lats) * 0.99))]
     print(f"[serve] engine: {len(results)} requests, {n_tok} tokens in "
           f"{wall:.2f}s -> {n_tok / wall:.0f} tok/s")
+    qs = engine.queue_stats()
+    print(f"[serve] statuses {statuses}, queue depth peak {qs['peak']} "
+          f"mean {qs['mean']:.1f}"
+          + (f", {qs['rejected']} shed at --max-queue {args.max_queue}"
+             if args.max_queue else ""))
     print(f"[serve] latency p50 {p50 * 1e3:.1f}ms p99 {p99 * 1e3:.1f}ms, "
           f"slot utilization {engine.utilization():.2f}")
     admit_note = (f"[serve] admissions: {engine.prefill_admitted} requests "
@@ -285,9 +300,11 @@ def _serve_engine(args, cfg, model, params):
             print("[serve] --verify compares dense-KV greedy; skipping "
                   "under --kv-quant")
         else:
-            bad = _verify_against_static(model, params, reqs, results, max_len)
+            bad, checked = _verify_against_static(model, params, reqs,
+                                                  results, max_len)
             print(f"[serve] verify vs static path: "
-                  f"{len(reqs) - bad}/{len(reqs)} bit-identical")
+                  f"{checked - bad}/{checked} completed requests "
+                  f"bit-identical ({len(reqs) - checked} not completed)")
             if bad:
                 raise SystemExit(1)
 
@@ -339,6 +356,10 @@ def main():
     ap.add_argument("--mixed-admission", action="store_true",
                     help="engine: admit mixed-bucket FIFO head-runs in one "
                          "right-padded prefill dispatch")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="engine: bound the admission queue — submissions "
+                         "past the bound shed with a 'rejected' status "
+                         "(0 -> unbounded)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)

@@ -8,18 +8,24 @@ for the quantized-cache hook); the `Engine` itself imports the model
 stack, so it loads lazily — keeping `repro.serving.kv_cache` importable
 from inside `repro.models` without a cycle.
 """
+from repro.serving.faults import (ALLOC_FAIL, KINDS, NAN_LOGITS, SPILL_FAIL,
+                                  FaultPlan, InjectedFault)
 from repro.serving.kv_cache import (KVCacheConfig, QuantizedKV, cache_bytes,
-                                    init_paged_storage, init_slot_cache,
-                                    kv_dequantize, kv_quantize, kv_update,
+                                    cache_is_finite, init_paged_storage,
+                                    init_slot_cache, kv_dequantize,
+                                    kv_quantize, kv_update,
                                     paged_view, set_slot_rows, slot_rows,
                                     write_pages, write_slot)
 from repro.serving.paging import (PageAllocator, pow2_at_least,
                                   restore_pages, spill_pages)
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.sampling import SamplingParams, sample_tokens
-from repro.serving.scheduler import (AdmittedBatch, GenerationRequest,
-                                     GenerationResult, ResumeTicket,
-                                     Scheduler)
+from repro.serving.scheduler import (AdmittedBatch, DuplicateRequestError,
+                                     EngineError, EngineInvariantError,
+                                     EngineStalledError, GenerationRequest,
+                                     GenerationResult, InvalidRequestError,
+                                     QueueFullError, RequestStatus,
+                                     ResumeTicket, Scheduler)
 
 _LAZY = ("Engine", "EngineConfig", "batch_buckets")
 
@@ -31,10 +37,15 @@ def __getattr__(name):
     raise AttributeError(name)
 
 
-__all__ = ["AdmittedBatch", "Engine", "EngineConfig", "GenerationRequest",
-           "GenerationResult", "KVCacheConfig", "PageAllocator",
-           "PrefixCache", "QuantizedKV", "ResumeTicket", "SamplingParams",
-           "Scheduler", "batch_buckets", "cache_bytes", "init_paged_storage",
+__all__ = ["ALLOC_FAIL", "AdmittedBatch", "DuplicateRequestError", "Engine",
+           "EngineConfig", "EngineError", "EngineInvariantError",
+           "EngineStalledError", "FaultPlan", "GenerationRequest",
+           "GenerationResult", "InjectedFault", "InvalidRequestError",
+           "KINDS", "KVCacheConfig", "NAN_LOGITS", "PageAllocator",
+           "PrefixCache", "QuantizedKV", "QueueFullError", "RequestStatus",
+           "ResumeTicket", "SPILL_FAIL", "SamplingParams", "Scheduler",
+           "batch_buckets", "cache_bytes", "cache_is_finite",
+           "init_paged_storage",
            "init_slot_cache", "kv_dequantize", "kv_quantize", "kv_update",
            "paged_view", "pow2_at_least", "restore_pages", "sample_tokens",
            "set_slot_rows", "slot_rows", "spill_pages", "write_pages",

@@ -63,9 +63,11 @@ from repro.serving.kv_cache import (KVCacheConfig, cache_bytes,
 from repro.serving.paging import (PageAllocator, restore_pages, spill_pages)
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.sampling import sample_tokens
-from repro.serving.scheduler import (AdmittedBatch, GenerationRequest,
-                                     GenerationResult, ResumeTicket,
-                                     Scheduler)
+from repro.serving.scheduler import (AdmittedBatch, DuplicateRequestError,
+                                     EngineInvariantError, EngineStalledError,
+                                     GenerationRequest, GenerationResult,
+                                     InvalidRequestError, QueueFullError,
+                                     RequestStatus, ResumeTicket, Scheduler)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,7 +89,15 @@ class EngineConfig:
     differ by masked-out zeros). ``mixed_admission`` lets one prefill
     dispatch admit a FIFO head-run that crosses prompt buckets
     (right-padded to the largest member's bucket) — fewer dispatches,
-    identical outputs."""
+    identical outputs.
+
+    ``max_queue`` bounds the scheduler backlog: a submit that would push
+    the queue past it raises :class:`QueueFullError` (load shedding;
+    ``try_submit`` converts the raise into a terminal ``rejected``
+    result). 0 → unbounded. ``stall_patience`` is how many consecutive
+    no-progress steps :meth:`Engine.run` tolerates with work outstanding
+    before raising :class:`EngineStalledError` (early deadlock
+    detection)."""
     num_slots: int = 8
     max_len: int = 256
     prompt_buckets: tuple = ()
@@ -100,6 +110,8 @@ class EngineConfig:
     num_pages: int = 0                 # 0 → auto (slot-equivalent capacity)
     prefix_caching: bool = True        # paged only
     mixed_admission: bool = False      # cross-bucket admission runs
+    max_queue: int = 0                 # 0 → unbounded backlog
+    stall_patience: int = 8            # no-progress steps before stalling
 
 
 def batch_buckets(num_slots: int) -> tuple:
@@ -115,13 +127,15 @@ def batch_buckets(num_slots: int) -> tuple:
 class Engine:
     """Slot-based continuous batching over a fixed-shape decode program."""
 
-    def __init__(self, model, params, cfg: EngineConfig = EngineConfig()):
+    def __init__(self, model, params, cfg: EngineConfig = EngineConfig(),
+                 faults=None):
         mcfg = model.cfg
         if mcfg.family not in ("dense", "moe") or mcfg.frontend:
             raise ValueError(
                 f"engine serves token-LM families (dense/moe), got "
                 f"{mcfg.family}/{mcfg.frontend}")
         self.model, self.params, self.cfg = model, params, cfg
+        self.faults = faults               # FaultPlan | None (set_faults)
         self.scheduler = Scheduler(cfg.num_slots, cfg.max_len,
                                    cfg.prompt_buckets)
         self.batch_buckets = batch_buckets(cfg.num_slots)
@@ -145,7 +159,7 @@ class Engine:
             self.kv = init_paged_storage(
                 mcfg, num_pages, pg, dtype=cfg.kv_dtype,
                 quantized=cfg.kv_quantized, group_size=cfg.kv_group_size)
-            self.alloc = PageAllocator(num_pages)
+            self.alloc = PageAllocator(num_pages, faults=faults)
             self.prefix = (PrefixCache(pg, self.alloc)
                            if cfg.prefix_caching else None)
             # block tables are host state; rows ride to the device as plain
@@ -187,8 +201,29 @@ class Engine:
         self.preemptions = 0            # requests spilled under pressure
         self.resumes = 0                # tickets restored onto a slot
         self.pages_spilled = 0          # pages round-tripped through host
+        self.rejected = 0               # try_submit load-shed rejections
+        self.queue_depth_peak = 0       # scheduler backlog, sampled per step
+        self.queue_depth_sum = 0
+        self.queue_depth_steps = 0
+        self._queue_depth_trace: List[int] = []
         if self.alloc is not None:
             self.alloc.peak_in_use = self.alloc.pages_in_use
+
+    def set_faults(self, plan) -> None:
+        """Attach/replace the :class:`~repro.serving.faults.FaultPlan`
+        (engine hooks AND the page allocator). Attach AFTER :meth:`warmup`
+        so scripted fault steps count from the first real step (warmup
+        disables injection regardless)."""
+        self.faults = plan
+        if self.alloc is not None:
+            self.alloc.faults = plan
+
+    def _now(self) -> float:
+        """Engine clock: the fault plan's virtual clock when one with
+        ``slow_step_s`` is attached (deterministic deadline tests),
+        wall-clock otherwise."""
+        return (self.faults.now() if self.faults is not None
+                else time.perf_counter())
 
     # -- jitted steps ------------------------------------------------------
     def _make_step_fns(self):
@@ -230,7 +265,12 @@ class Engine:
             logits, cache = model.decode_step(params, tokens, cache)
             tok = sample_tokens(logits[:, 0, :], temps, topks, seeds, steps,
                                 max_top_k=cfg.max_top_k)
-            return tok, {"k": cache["k"], "v": cache["v"]}
+            # finite-logit flag rides along in the same int32 transfer: a
+            # slot whose logits went non-finite fails ALONE on the host
+            ok = jnp.all(jnp.isfinite(logits[:, 0, :]), axis=-1)
+            out = jnp.stack([tok.astype(jnp.int32),
+                             ok.astype(jnp.int32)], axis=-1)
+            return out, {"k": cache["k"], "v": cache["v"]}
 
         return (jax.jit(prefill_fn, donate_argnums=1),
                 jax.jit(chunk_fn, donate_argnums=1),
@@ -280,7 +320,10 @@ class Engine:
             logits, cache = model.decode_step(params, tokens, cache)
             tok = sample_tokens(logits[:, 0, :], temps, topks, seeds, steps,
                                 max_top_k=cfg.max_top_k)
-            return tok, {"k": cache["k"], "v": cache["v"]}
+            ok = jnp.all(jnp.isfinite(logits[:, 0, :]), axis=-1)
+            out = jnp.stack([tok.astype(jnp.int32),
+                             ok.astype(jnp.int32)], axis=-1)
+            return out, {"k": cache["k"], "v": cache["v"]}
 
         return (jax.jit(prefill_fn, donate_argnums=1),
                 jax.jit(chunk_fn, donate_argnums=1),
@@ -288,10 +331,97 @@ class Engine:
 
     # -- request API -------------------------------------------------------
     def submit(self, req: GenerationRequest) -> None:
+        """Enqueue a request. Raises typed, caller-distinguishable errors:
+        :class:`DuplicateRequestError` for an rid already in flight (the
+        scheduler would otherwise silently overwrite its result),
+        :class:`InvalidRequestError` for requests that can NEVER be
+        admitted (bad shape, or a prompt needing more pages than the whole
+        pool), :class:`QueueFullError` when ``max_queue`` would be
+        exceeded. See :meth:`try_submit` for shed-as-result semantics."""
+        if req.rid in self._results:
+            raise DuplicateRequestError(
+                f"request rid={req.rid} is already in flight")
+        if self._paged:
+            need = -(-req.prompt_len // self.cfg.page_size)
+            if need > self.alloc.num_pages:
+                raise InvalidRequestError(
+                    f"request rid={req.rid}: prompt needs {need} pages but "
+                    f"the pool has {self.alloc.num_pages} — can never be "
+                    f"admitted")
+        if (self.cfg.max_queue > 0 and req.rid >= 0
+                and len(self.scheduler.queue) >= self.cfg.max_queue):
+            # negative rids are warmup clones — internal, never shed
+            raise QueueFullError(
+                f"request rid={req.rid} rejected: queue at "
+                f"max_queue={self.cfg.max_queue}")
         self.scheduler.submit(req)
         self._results[req.rid] = GenerationResult(
             rid=req.rid, prompt_len=req.prompt_len, tokens=[],
-            t_enqueue=time.perf_counter())
+            t_enqueue=self._now())
+
+    def try_submit(self, req: GenerationRequest) -> bool:
+        """Load-shedding submit: capacity/validity rejections become a
+        terminal result with ``status == "rejected"`` (surfaced by
+        :meth:`run` like any other completion) instead of an exception.
+        Duplicate rids still raise — shedding a duplicate would emit two
+        results for one rid."""
+        try:
+            self.submit(req)
+            return True
+        except DuplicateRequestError:
+            raise
+        except (QueueFullError, InvalidRequestError) as e:
+            now = self._now()
+            self._done.append(GenerationResult(
+                rid=req.rid, prompt_len=req.prompt_len, tokens=[],
+                t_enqueue=now, t_finish=now,
+                status=RequestStatus.REJECTED.value,
+                finish_reason=RequestStatus.REJECTED.value, error=str(e)))
+            self.rejected += 1
+            return False
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel an in-flight request. Queued requests (and preempted
+        tickets — their spilled host payload dies with the ticket) leave
+        the queue; a running request is failed out of its slot with its
+        pages reclaimed. Either way the partial tokens generated so far
+        are emitted in a terminal ``cancelled`` result. False when the rid
+        is unknown or already finished."""
+        if rid not in self._results:
+            return False
+        item = self.scheduler.remove(rid)
+        if item is not None:
+            self._finish_queued(item, RequestStatus.CANCELLED.value)
+            return True
+        for slot in self.scheduler.active_slots():
+            if self.scheduler.slots[slot].request.rid == rid:
+                self._fail_slot(slot, RequestStatus.CANCELLED.value)
+                return True
+        return False
+
+    def _expire_deadlines(self) -> None:
+        """Terminal-fail every request whose ``deadline_s`` has elapsed
+        since submit — queued requests shed without ever running; running
+        requests keep the tokens they produced. Called at each step
+        boundary, so expiry lags the deadline by at most one step."""
+        now = self._now()
+        sched = self.scheduler
+        expired = []
+        for item in sched.queue:
+            req = item.request if isinstance(item, ResumeTicket) else item
+            if (req.deadline_s > 0 and req.rid in self._results
+                    and now - self._results[req.rid].t_enqueue
+                    >= req.deadline_s):
+                expired.append(req.rid)
+        for rid in expired:
+            self._finish_queued(sched.remove(rid),
+                                RequestStatus.DEADLINE.value)
+        for slot in list(sched.active_slots()):
+            req = sched.slots[slot].request
+            if (req.deadline_s > 0
+                    and now - self._results[req.rid].t_enqueue
+                    >= req.deadline_s):
+                self._fail_slot(slot, RequestStatus.DEADLINE.value)
 
     def warmup(self, reqs) -> Dict[str, int]:
         """Compile every program a trace shaped like ``reqs`` can hit
@@ -320,6 +450,8 @@ class Engine:
                 "Engine.warmup on a non-idle engine: warmup drains the "
                 "scheduler, which would silently execute and discard "
                 "already-submitted requests — warm up first, then submit")
+        plan = self.faults
+        self.set_faults(None)          # warmup always runs fault-free
         wmax = self.scheduler.buckets[-1]
         seen: Dict[int, GenerationRequest] = {}
         chunked = False
@@ -390,23 +522,43 @@ class Engine:
             assert self.alloc.pages_in_use == 0, \
                 f"warmup leaked {self.alloc.pages_in_use} pages"
         self._reset_counters()
+        self.set_faults(plan)
         return self.compile_counts()
 
     def step(self) -> None:
         """Admit every admissible request (one batched prefill dispatch per
         FIFO head-run, chunked prefill for beyond-largest-bucket prompts
         and prefix-hit suffixes, page restoration for resume tickets), then
-        run one decode step for all slots."""
+        run one decode step for all slots.
+
+        Failure-atomic: a fault anywhere in the step (failed spill or
+        restore, injected allocation failure, non-finite decode logits, a
+        prefill dispatch raising) terminal-fails ONLY the culpable
+        request(s), rolls their page/slot acquisitions back, and leaves the
+        rest of the batch serving — :meth:`check_invariants` holds at every
+        step boundary."""
         sched = self.scheduler
+        if self.faults is not None:
+            self.faults.tick()
+        self._expire_deadlines()
+        q = len(sched.queue)
+        self.queue_depth_peak = max(self.queue_depth_peak, q)
+        self.queue_depth_sum += q
+        self.queue_depth_steps += 1
+        if len(self._queue_depth_trace) < 4096:
+            self._queue_depth_trace.append(q)
         if self._paged:
             self._admit_paged()
         else:
             while (batch := sched.admit_batch(
                     mixed=self.cfg.mixed_admission)) is not None:
-                if batch.chunked:
-                    self._run_chunked(*batch.items[0])
-                else:
-                    self._run_prefill_batch(batch)
+                try:
+                    if batch.chunked:
+                        self._run_chunked(*batch.items[0])
+                    else:
+                        self._run_prefill_batch(batch)
+                except Exception as e:      # noqa: BLE001 — fault isolation
+                    self._abort_admission(batch.items, e)
 
         if sched.num_active == 0:
             return
@@ -414,31 +566,52 @@ class Engine:
             self._extend_for_decode()
             if sched.num_active == 0:      # extension self-preempted all
                 return
-            tok_dev, self.kv = self._decode(
+            out_dev, self.kv = self._decode(
                 self.params, self.kv, jnp.asarray(self._pos),
                 jnp.asarray(self._tok[:, None]), jnp.asarray(self._temps),
                 jnp.asarray(self._topks), jnp.asarray(self._seeds),
                 jnp.asarray(self._steps), jnp.asarray(self._table))
         else:
-            tok_dev, self.kv = self._decode(
+            out_dev, self.kv = self._decode(
                 self.params, self.kv, jnp.asarray(self._pos),
                 jnp.asarray(self._tok[:, None]), jnp.asarray(self._temps),
                 jnp.asarray(self._topks), jnp.asarray(self._seeds),
                 jnp.asarray(self._steps))
-        toks = np.asarray(tok_dev)            # one int32 per slot per step
-        now = time.perf_counter()
+        out = np.asarray(out_dev)             # (S, 2): token + finite flag
+        toks, finite = out[:, 0], out[:, 1]
+        now = self._now()
         self.decode_steps += 1
         self.active_slot_steps += sched.num_active
-        for slot in sched.active_slots():
+        for slot in list(sched.active_slots()):
             state = sched.slots[slot]
+            rid = state.request.rid
+            bad = not finite[slot]
+            if self.faults is not None and self.faults.poison_logits(rid):
+                bad = True
+            if bad:
+                # the sampled token is garbage: fail this slot alone, keep
+                # the rest of the batch decoding
+                self._fail_slot(slot, RequestStatus.ERROR.value,
+                                "non-finite decode logits")
+                continue
             tok = int(toks[slot])
             state.generated += 1
-            self._results[state.request.rid].tokens.append(tok)
+            self._results[rid].tokens.append(tok)
             self._pos[slot] += 1
             self._tok[slot] = tok
             self._steps[slot] += 1
             if state.done or tok == state.request.eos_id:
                 self._finish(slot, now)
+
+    def _abort_admission(self, items, exc: Exception) -> None:
+        """A prefill dispatch raised mid-admission: terminal-fail exactly
+        the requests it was admitting (their slots/pages roll back) and
+        keep serving everyone else."""
+        for slot, req in items:
+            state = self.scheduler.slots[slot]
+            if state is not None and state.request.rid == req.rid:
+                self._fail_slot(slot, RequestStatus.ERROR.value,
+                                f"prefill failed: {exc}")
 
     def _run_prefill_batch(self, batch: AdmittedBatch) -> None:
         """One device dispatch for a whole same-bucket admission batch."""
@@ -464,7 +637,7 @@ class Engine:
         toks = np.asarray(tok_dev)            # B first tokens, one transfer
         self.prefill_dispatches += 1
         self.prefill_admitted += b
-        now = time.perf_counter()
+        now = self._now()
         for i, (slot, req) in enumerate(batch.items):
             self._record_first_token(slot, req, int(toks[i]), now)
 
@@ -486,8 +659,7 @@ class Engine:
                 np.int32(sp.top_k), np.uint32(sp.seed))
             self.chunk_dispatches += 1
         self.chunked_admitted += 1
-        self._record_first_token(slot, req, int(tok_dev),
-                                 time.perf_counter())
+        self._record_first_token(slot, req, int(tok_dev), self._now())
 
     # -- paged admission ---------------------------------------------------
     def _set_table_row(self, slot: int, pages: List[int]) -> None:
@@ -538,12 +710,24 @@ class Engine:
         sched = self.scheduler
         state = sched.slots[slot]
         pages = self._slot_pages[slot]
+        try:
+            if self.faults is not None:
+                self.faults.check_spill("spill")
+            payload = spill_pages(self.kv, pages)
+        except Exception as e:             # noqa: BLE001 — fault isolation
+            # the spill never produced a payload, so the victim's cache
+            # state is unrecoverable: fail it (partial tokens survive
+            # host-side) and reclaim its pages — the pool still frees, so
+            # the caller's escalation makes progress either way
+            self._fail_slot(slot, RequestStatus.ERROR.value,
+                            f"preemption spill failed: {e}")
+            return
         ticket = ResumeTicket(request=state.request,
                               generated=state.generated,
                               last_token=int(self._tok[slot]),
                               pos=int(self._pos[slot]),
                               n_pages=len(pages),
-                              payload=spill_pages(self.kv, pages))
+                              payload=payload)
         sched.preempt(slot, ticket)
         self.preemptions += 1
         self.pages_spilled += len(pages)
@@ -567,8 +751,20 @@ class Engine:
         if pages is None:
             return False
         slot, ticket = sched.admit_head()
-        self.kv = restore_pages(self.kv, pages, ticket.payload,
-                                self.alloc.num_pages)
+        try:
+            if self.faults is not None:
+                self.faults.check_spill("restore")
+            self.kv = restore_pages(self.kv, pages, ticket.payload,
+                                    self.alloc.num_pages)
+        except Exception as e:             # noqa: BLE001 — fault isolation
+            # the spilled bytes never reached the device: hand the fresh
+            # pages back and fail the ticket's request (its pre-preemption
+            # tokens survive in the result). Returning True is honest —
+            # the ticket reached a terminal state, the queue moved.
+            self.alloc.decref(pages)
+            self._fail_slot(slot, RequestStatus.ERROR.value,
+                            f"resume restore failed: {e}")
+            return True
         self._slot_pages[slot] = pages
         self._set_table_row(slot, pages)
         sp = ticket.request.sampling
@@ -657,7 +853,13 @@ class Engine:
                 # the flush writes any pending twin's pages before the
                 # chunk program reads the matched ones (in-order dispatch)
                 self._flush_pending(pending)
-                self._admit_stream(slot, req, mtok)
+                try:
+                    self._admit_stream(slot, req, mtok)
+                except Exception as e:  # noqa: BLE001 — fault isolation
+                    # fail this admission alone; skip the prefix insert
+                    # (the pages hold a partially written prompt)
+                    self._abort_admission([(slot, req)], e)
+                    continue
             else:
                 if (pending and not self.cfg.mixed_admission
                         and sched.bucket_for(req.prompt_len)
@@ -674,6 +876,13 @@ class Engine:
         carry all-sentinel page maps)."""
         if not pending:
             return
+        try:
+            self._dispatch_pending(pending)
+        except Exception as e:             # noqa: BLE001 — fault isolation
+            self._abort_admission(pending, e)
+        del pending[:]
+
+    def _dispatch_pending(self, pending: List[tuple]) -> None:
         b = len(pending)
         w = max(self.scheduler.bucket_for(r.prompt_len) for _, r in pending)
         bb = next(x for x in self.batch_buckets if b <= x)
@@ -699,10 +908,9 @@ class Engine:
         toks = np.asarray(tok_dev)
         self.prefill_dispatches += 1
         self.prefill_admitted += b
-        now = time.perf_counter()
+        now = self._now()
         for i, (slot, req) in enumerate(pending):
             self._record_first_token(slot, req, int(toks[i]), now)
-        del pending[:]
 
     def _admit_stream(self, slot: int, req: GenerationRequest,
                       start_tok: int) -> None:
@@ -724,8 +932,7 @@ class Engine:
                 np.int32(sp.top_k), np.uint32(sp.seed))
             self.chunk_dispatches += 1
         self.chunked_admitted += 1
-        self._record_first_token(slot, req, int(tok_dev),
-                                 time.perf_counter())
+        self._record_first_token(slot, req, int(tok_dev), self._now())
 
     def _record_first_token(self, slot: int, req: GenerationRequest,
                             tok: int, now: float) -> None:
@@ -748,7 +955,29 @@ class Engine:
         req = self.scheduler.retire(slot)
         res = self._results.pop(req.rid)
         res.t_finish = now
+        res.status = RequestStatus.OK.value
+        res.finish_reason = (RequestStatus.EOS.value
+                             if res.tokens and res.tokens[-1] == req.eos_id
+                             else RequestStatus.LENGTH.value)
         self._done.append(res)
+        self._release_slot(slot)
+
+    def _fail_slot(self, slot: int, status: str, msg: str = "") -> None:
+        """Terminal-fail a LIVE slot: retire it, reclaim its pages, park
+        it, and emit the partial-token result with ``status``. The
+        crash-safe reclamation primitive — cancel, deadline expiry, and
+        step-level fault isolation all land here, so a failing request can
+        never leak pages or wedge its slot."""
+        req = self.scheduler.retire(slot)
+        res = self._results.pop(req.rid)
+        res.t_finish = self._now()
+        res.status = status
+        res.finish_reason = status
+        res.error = msg
+        self._done.append(res)
+        self._release_slot(slot)
+
+    def _release_slot(self, slot: int) -> None:
         if self._paged:
             # release the request's page references; prefix-cached pages
             # keep their cache reference and survive for future matches
@@ -756,6 +985,20 @@ class Engine:
             self._slot_pages[slot] = []
             self._set_table_row(slot, [])
         self._park(slot)
+
+    def _finish_queued(self, item, status: str, msg: str = "") -> None:
+        """Terminal a request that never reached (or was preempted off) a
+        slot: queued requests carry no device state; a ResumeTicket's pages
+        were already released at preemption and its spilled host payload
+        dies with the ticket. Partial tokens accumulated before a
+        preemption are still in the result and are emitted."""
+        req = item.request if isinstance(item, ResumeTicket) else item
+        res = self._results.pop(req.rid)
+        res.t_finish = self._now()
+        res.status = status
+        res.finish_reason = status
+        res.error = msg
+        self._done.append(res)
 
     def _park(self, slot: int) -> None:
         # park the freed slot: greedy token 0 at position 0, overwritten by
@@ -769,15 +1012,113 @@ class Engine:
         self._steps[slot] = 0
 
     def run(self, max_steps: int = 1_000_000) -> List[GenerationResult]:
-        """Drive until every submitted request completes; returns results
-        in completion order."""
+        """Drive until every submitted request reaches a terminal status;
+        returns results in completion order.
+
+        Raises :class:`EngineStalledError` — carrying the stuck requests'
+        rids and where they are stuck — in two cases: ``max_steps``
+        exhausted with work outstanding, or (early deadlock detection)
+        ``cfg.stall_patience`` consecutive steps made NO progress (no
+        decode, no admission, no resume, no completion) while work remains.
+        A decode step always counts as progress, so patience only burns
+        while the engine spins on an unadmittable queue."""
+        sched = self.scheduler
+        stalled = 0
         for _ in range(max_steps):
-            if self.scheduler.idle:
+            if sched.idle:
                 break
+            before = (self.decode_steps, self.prefill_admitted,
+                      self.chunked_admitted, self.resumes, len(self._done))
             self.step()
-        assert self.scheduler.idle, "engine stopped with work outstanding"
+            if (self.decode_steps, self.prefill_admitted,
+                    self.chunked_admitted, self.resumes,
+                    len(self._done)) == before:
+                stalled += 1
+                if stalled >= self.cfg.stall_patience and not sched.idle:
+                    raise EngineStalledError(
+                        f"engine deadlocked: no progress for {stalled} "
+                        f"consecutive steps with work outstanding",
+                        sched.stuck_state())
+            else:
+                stalled = 0
+        if not sched.idle:
+            raise EngineStalledError(
+                f"engine stopped after max_steps={max_steps} with work "
+                f"outstanding", self.scheduler.stuck_state())
         out, self._done = self._done, []
         return out
+
+    # -- invariants --------------------------------------------------------
+    def check_invariants(self) -> bool:
+        """Reconcile every piece of host bookkeeping against every other:
+        scheduler slot partition, result-table coverage, block tables vs.
+        per-slot page lists, and (paged) the allocator's refcounts/free
+        list against the union of live block tables and prefix-cache
+        references. Raises :class:`EngineInvariantError` naming the first
+        mismatch; returns True when consistent. Pure host arithmetic — no
+        device sync — so chaos tests call it after EVERY step."""
+        sched = self.scheduler
+        n = self.cfg.num_slots
+        free, active = list(sched.free), list(sched.active_slots())
+        if sorted(free + active) != list(range(n)):
+            raise EngineInvariantError(
+                f"slot partition broken: free={sorted(free)} "
+                f"active={sorted(active)}")
+        for slot in active:
+            rid = sched.slots[slot].request.rid
+            if rid not in self._results:
+                raise EngineInvariantError(
+                    f"active rid={rid} (slot {slot}) has no result entry")
+        for item in sched.queue:
+            req = item.request if isinstance(item, ResumeTicket) else item
+            if req.rid not in self._results:
+                raise EngineInvariantError(
+                    f"queued rid={req.rid} has no result entry")
+        if not self._paged:
+            return True
+        pg, sentinel = self.cfg.page_size, self.alloc.num_pages
+        want: Dict[int, int] = {}
+        for slot in range(n):
+            pages = self._slot_pages[slot]
+            row = self._table[slot]
+            if list(row[:len(pages)]) != pages or not np.all(
+                    row[len(pages):] == sentinel):
+                raise EngineInvariantError(
+                    f"slot {slot} block table {row.tolist()} does not "
+                    f"match page list {pages}")
+            if slot in active:
+                if len(pages) * pg < int(self._pos[slot]):
+                    raise EngineInvariantError(
+                        f"slot {slot} holds {len(pages)} pages "
+                        f"({len(pages) * pg} tokens) but pos="
+                        f"{int(self._pos[slot])}: cache rows unbacked")
+            elif pages:
+                raise EngineInvariantError(
+                    f"parked slot {slot} still holds pages {pages}")
+            for p in pages:
+                want[p] = want.get(p, 0) + 1
+        if self.prefix is not None:
+            for p in self.prefix.pages():
+                want[p] = want.get(p, 0) + 1
+        refs = self.alloc.refs()
+        if want != refs:
+            diff = {p: (want.get(p, 0), refs.get(p, 0))
+                    for p in set(want) | set(refs)
+                    if want.get(p, 0) != refs.get(p, 0)}
+            raise EngineInvariantError(
+                f"page refcounts out of sync (page: want/have): {diff}")
+        free_pages = self.alloc.free_pages()
+        free_set = set(free_pages)
+        if len(free_set) != len(free_pages):
+            raise EngineInvariantError("free list holds duplicate pages")
+        if free_set & set(refs):
+            raise EngineInvariantError(
+                f"pages both free and referenced: {free_set & set(refs)}")
+        if len(free_set) + len(refs) != self.alloc.num_pages:
+            orphans = set(range(self.alloc.num_pages)) - free_set - set(refs)
+            raise EngineInvariantError(
+                f"pages leaked (neither free nor referenced): {orphans}")
+        return True
 
     # -- introspection -----------------------------------------------------
     def compile_counts(self) -> Dict[str, Optional[int]]:
@@ -826,6 +1167,18 @@ class Engine:
             return 0.0
         return self.active_slot_steps / (self.decode_steps
                                          * self.cfg.num_slots)
+
+    def queue_stats(self) -> Dict[str, Any]:
+        """Backlog observability: queue depth sampled at each step
+        boundary (peak / mean / per-step trace, trace capped at 4096
+        samples) plus the ``try_submit`` load-shed count. Counters reset
+        with :meth:`warmup`."""
+        steps = max(self.queue_depth_steps, 1)
+        return {"peak": self.queue_depth_peak,
+                "mean": self.queue_depth_sum / steps,
+                "samples": self.queue_depth_steps,
+                "rejected": self.rejected,
+                "trace": list(self._queue_depth_trace)}
 
 
 __all__ = ["Engine", "EngineConfig", "GenerationRequest", "GenerationResult",

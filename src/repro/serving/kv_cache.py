@@ -343,7 +343,26 @@ def cache_bytes(cache: dict) -> int:
     return total
 
 
+def cache_is_finite(cache: dict) -> bool:
+    """Debug aid for the engine's non-finite-logit guard: True when every
+    float plane of the K/V storage is finite. When the decode guard fails
+    a slot, this localizes whether the corruption already lives in the
+    cache (bad prefill write, spilled-page bit rot) or only in that step's
+    activations. INT8 code planes are skipped (integers are always
+    finite); quantized per-group scales are checked. One device reduction
+    per plane — a diagnostic, not a per-step check."""
+    for name in ("k", "v"):
+        entry = cache[name]
+        leaves = ([entry.codes, entry.scales]
+                  if isinstance(entry, QuantizedKV) else [entry])
+        for leaf in leaves:
+            if jnp.issubdtype(leaf.dtype, jnp.floating) and not bool(
+                    jnp.all(jnp.isfinite(leaf))):
+                return False
+    return True
+
+
 __all__ = ["QuantizedKV", "KVCacheConfig", "init_slot_cache", "write_slot",
-           "slot_rows", "set_slot_rows", "cache_bytes", "kv_quantize",
-           "kv_dequantize", "kv_update", "init_paged_storage", "write_pages",
-           "paged_view", "take_pages", "put_pages"]
+           "slot_rows", "set_slot_rows", "cache_bytes", "cache_is_finite",
+           "kv_quantize", "kv_dequantize", "kv_update", "init_paged_storage",
+           "write_pages", "paged_view", "take_pages", "put_pages"]

@@ -48,12 +48,18 @@ def pow2_at_least(n: int) -> int:
 
 class PageAllocator:
     """Free-list page allocator with refcounts. Pure host bookkeeping —
-    the device pool itself lives in the engine's kv dict."""
+    the device pool itself lives in the engine's kv dict.
 
-    def __init__(self, num_pages: int):
+    ``faults`` (a :class:`~repro.serving.faults.FaultPlan`) lets tests and
+    chaos benchmarks inject allocation failures: a faulted :meth:`alloc`
+    reports pool-dry without touching state, driving callers through their
+    real escalation paths (prefix eviction → preemption → wait)."""
+
+    def __init__(self, num_pages: int, faults=None):
         if num_pages < 1:
             raise ValueError(f"page pool needs >= 1 page, got {num_pages}")
         self.num_pages = num_pages          # also the sentinel index
+        self.faults = faults
         self._free: deque = deque(range(num_pages))
         self._refs: Dict[int, int] = {}     # page -> refcount (live pages)
         self.peak_in_use = 0
@@ -71,10 +77,21 @@ class PageAllocator:
         """0 for free pages."""
         return self._refs.get(page, 0)
 
+    def refs(self) -> Dict[int, int]:
+        """Snapshot of live page -> refcount (the engine's invariant
+        checker reconciles this against block tables + prefix cache)."""
+        return dict(self._refs)
+
+    def free_pages(self) -> List[int]:
+        """Snapshot of the free list, in pop order."""
+        return list(self._free)
+
     # -- alloc/free --------------------------------------------------------
     def alloc(self, n: int) -> Optional[List[int]]:
         """Pop n pages (refcount 1 each), or None if the pool is short —
         the caller escalates (evict prefix entries, preempt a request)."""
+        if self.faults is not None and self.faults.fail_alloc():
+            return None                     # injected: pretend pool-dry
         if n > len(self._free):
             return None
         pages = [self._free.popleft() for _ in range(n)]

@@ -57,6 +57,12 @@ class PrefixCache:
     def cached_pages(self) -> int:
         return len(self._entries)
 
+    def pages(self) -> List[int]:
+        """Every page the cache currently holds a reference on (including
+        entries made unreachable by an interior eviction) — the engine's
+        invariant checker reconciles refcounts against this."""
+        return list(self._entries.values())
+
     def _hashes(self, tokens, n_pages: int):
         pg = self.page_size
         toks = np.asarray(tokens, np.int32)

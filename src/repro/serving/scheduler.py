@@ -25,6 +25,7 @@ Invariants (tested in tests/test_engine.py and tests/test_paging.py):
 from __future__ import annotations
 
 import dataclasses
+import enum
 from collections import deque
 from typing import Deque, List, Optional
 
@@ -33,17 +34,68 @@ import numpy as np
 from repro.serving.sampling import SamplingParams
 
 
+class RequestStatus(str, enum.Enum):
+    """Terminal request states. Every request the engine ever accepted ends
+    in exactly one of these; ``ok`` is the umbrella success status (its
+    ``finish_reason`` refines it to ``length`` or ``eos``)."""
+    OK = "ok"                  # completed normally (length / eos)
+    LENGTH = "length"          # finish_reason: decode budget exhausted
+    EOS = "eos"                # finish_reason: sampled the eos token
+    CANCELLED = "cancelled"    # Engine.cancel(rid) — partial tokens kept
+    DEADLINE = "deadline"      # deadline_s expired (queued or running)
+    REJECTED = "rejected"      # shed at submit (queue full / inadmissible)
+    ERROR = "error"            # step failure isolated to this request
+
+
+class EngineError(RuntimeError):
+    """Base of the serving layer's typed failures."""
+
+
+class InvalidRequestError(EngineError, ValueError):
+    """The request can never be admitted (shape/budget violations)."""
+
+
+class DuplicateRequestError(InvalidRequestError):
+    """A request with this rid is already in flight."""
+
+
+class QueueFullError(EngineError):
+    """Admission queue at ``EngineConfig.max_queue`` — request shed."""
+
+
+class EngineInvariantError(EngineError):
+    """check_invariants() found irreconcilable engine state."""
+
+
+class EngineStalledError(EngineError):
+    """The engine stopped making progress with work outstanding.
+
+    ``stuck`` carries one dict per unfinished request: rid, where it is
+    (``queued`` / ``ticket`` / ``slot N``), prompt length, tokens generated
+    so far, and the decode position for running requests."""
+
+    def __init__(self, msg: str, stuck: Optional[List[dict]] = None):
+        self.stuck = stuck or []
+        detail = "; ".join(
+            f"rid={s['rid']} {s['where']} gen={s.get('generated', 0)}"
+            for s in self.stuck)
+        super().__init__(f"{msg}" + (f" [{detail}]" if detail else ""))
+
+
 @dataclasses.dataclass
 class GenerationRequest:
     """One generation job: prompt tokens + decode budget + sampling policy.
     ``eos_id < 0`` disables early stopping (the synthetic-corpus default).
-    ``seq`` is the scheduler-assigned admission priority (submit order,
-    lower = older = higher priority); callers leave it at -1."""
+    ``deadline_s > 0`` expires the request (queued OR running) that many
+    seconds after enqueue — checked at step boundaries, partial tokens are
+    kept. ``seq`` is the scheduler-assigned admission priority (submit
+    order, lower = older = higher priority); callers leave it at -1."""
     rid: int
     prompt: np.ndarray                 # (prompt_len,) int32
     max_new_tokens: int
     sampling: SamplingParams = SamplingParams()
     eos_id: int = -1
+    deadline_s: float = 0.0            # 0 → no deadline
     seq: int = -1
 
     @property
@@ -53,14 +105,22 @@ class GenerationRequest:
 
 @dataclasses.dataclass
 class GenerationResult:
-    """Completed request: generated tokens + latency breadcrumbs (host
-    wall-clock seconds, filled by the engine)."""
+    """Terminal request record: generated tokens (possibly partial),
+    status/finish_reason taxonomy (:class:`RequestStatus` values), and
+    latency breadcrumbs (host wall-clock seconds, filled by the engine)."""
     rid: int
     prompt_len: int
     tokens: List[int]
     t_enqueue: float = 0.0
     t_first_token: float = 0.0
     t_finish: float = 0.0
+    status: str = RequestStatus.OK.value
+    finish_reason: str = ""            # length|eos|cancelled|deadline|...
+    error: str = ""                    # detail for error/rejected statuses
+
+    @property
+    def ok(self) -> bool:
+        return self.status == RequestStatus.OK.value
 
     @property
     def latency(self) -> float:
@@ -152,20 +212,31 @@ class Scheduler:
     # -- admission ---------------------------------------------------------
     def submit(self, req: GenerationRequest) -> None:
         if req.max_new_tokens < 1:
-            raise ValueError(
+            raise InvalidRequestError(
                 f"request {req.rid}: max_new_tokens {req.max_new_tokens} < 1 "
                 f"(every admitted request emits at least one token)")
         if req.prompt_len + req.max_new_tokens > self.max_len:
-            raise ValueError(
+            raise InvalidRequestError(
                 f"request {req.rid}: prompt {req.prompt_len} + "
                 f"max_new {req.max_new_tokens} exceeds max_len {self.max_len}")
         if req.prompt_len < 1:
-            raise ValueError(f"request {req.rid}: empty prompt")
+            raise InvalidRequestError(f"request {req.rid}: empty prompt")
         # prompts beyond the largest bucket are fine: they admit alone and
         # stream through the chunked prefill (see admit_batch)
         req.seq = self._seq
         self._seq += 1
         self.queue.append(req)
+
+    def remove(self, rid: int):
+        """Pull a QUEUED request or resume ticket out of the queue by rid
+        (cancellation / deadline expiry). Returns the removed item, or None
+        if no queued item carries that rid (it may be running or done)."""
+        for i, item in enumerate(self.queue):
+            r = item.request if isinstance(item, ResumeTicket) else item
+            if r.rid == rid:
+                del self.queue[i]
+                return item
+        return None
 
     def admit(self) -> Optional[tuple]:
         """Pop the FIFO head onto a free slot → (slot, request), or None."""
@@ -294,6 +365,28 @@ class Scheduler:
     def idle(self) -> bool:
         return not self.queue and self.num_active == 0
 
+    def stuck_state(self) -> List[dict]:
+        """Snapshot of every unfinished request (queue + slots) for
+        :class:`EngineStalledError` diagnostics."""
+        out = []
+        for item in self.queue:
+            if isinstance(item, ResumeTicket):
+                out.append({"rid": item.request.rid, "where": "ticket",
+                            "prompt_len": item.request.prompt_len,
+                            "generated": item.generated, "pos": item.pos})
+            else:
+                out.append({"rid": item.rid, "where": "queued",
+                            "prompt_len": item.prompt_len, "generated": 0})
+        for slot, state in enumerate(self.slots):
+            if state is not None:
+                out.append({"rid": state.request.rid, "where": f"slot {slot}",
+                            "prompt_len": state.request.prompt_len,
+                            "generated": state.generated})
+        return out
 
-__all__ = ["AdmittedBatch", "GenerationRequest", "GenerationResult",
-           "ResumeTicket", "SlotState", "Scheduler", "default_buckets"]
+
+__all__ = ["AdmittedBatch", "DuplicateRequestError", "EngineError",
+           "EngineInvariantError", "EngineStalledError", "GenerationRequest",
+           "GenerationResult", "InvalidRequestError", "QueueFullError",
+           "RequestStatus", "ResumeTicket", "SlotState", "Scheduler",
+           "default_buckets"]

@@ -304,3 +304,105 @@ def test_mixed_admission_one_dispatch_same_tokens(tiny_lm):
     assert mixed.prefill_dispatches == 1       # the whole head-run at once
     for req in reqs:
         assert got[req.rid] == want[req.rid], req.rid
+
+
+# ---------------------------------------------------------------------------
+# preemption edge cases (lifecycle hardening)
+# ---------------------------------------------------------------------------
+
+def test_preempt_sole_active_request_resumes_bit_identically(tiny_lm):
+    """Preempting the ONLY active request (impossible organically — the
+    oldest is never victimized — but reachable via operator action) must
+    fully round-trip: ticket queued, pool drained, then resumed onto a
+    fresh slot with bit-identical continuation."""
+    cfg, model, params = tiny_lm
+    req = _requests(cfg, lens=[13], gens=[10])[0]
+    slot = Engine(model, params, EngineConfig(num_slots=2, max_len=32))
+    want = _run(slot, req and [req])[0]
+
+    paged = Engine(model, params, EngineConfig(
+        num_slots=2, max_len=32, kv_layout="paged", page_size=8,
+        prefix_caching=False))
+    paged.warmup([req])
+    paged.submit(req)
+    paged.step()
+    paged.step()                                # prefill + a decode step
+    live = paged.scheduler.active_slots()
+    assert live == [0] or len(live) == 1
+    paged._preempt(live[0])                     # white-box: sole survivor
+    assert paged.alloc.pages_in_use == 0        # everything spilled out
+    assert paged.scheduler.num_active == 0
+    paged.check_invariants()
+    got = {r.rid: r for r in paged.run()}[0]
+    assert got.status == "ok" and got.tokens == want
+    assert paged.preemptions == 1 and paged.resumes == 1
+    assert paged.alloc.pages_in_use == 0
+
+
+def test_resume_waits_until_pool_frees_pages(tiny_lm):
+    """A ticket whose pages no longer fit the free pool must WAIT (never
+    preempt a strictly-older request) and resume bit-identically once the
+    older request retires and frees its pages."""
+    cfg, model, params = tiny_lm
+    # pg=4, max_len=16 → 4 pages/slot; pool of 6 pages, 2 slots. Both
+    # requests grow from 2 to 4 pages, so A's extension at pos 12 must
+    # preempt B, and B's 3-page ticket can't fit until A retires.
+    reqs = _requests(cfg, lens=[7, 7], gens=[9, 9])
+    slot = Engine(model, params, EngineConfig(num_slots=2, max_len=16))
+    want = _run(slot, reqs)
+
+    paged = Engine(model, params, EngineConfig(
+        num_slots=2, max_len=16, kv_layout="paged", page_size=4,
+        num_pages=6, prefix_caching=False))
+    paged.warmup(reqs)
+    for r in reqs:
+        paged.submit(r)
+    waited = 0
+    got = {}
+    for _ in range(200):
+        if paged.scheduler.idle:
+            break
+        paged.step()
+        paged.check_invariants()
+        head = paged.scheduler.peek()
+        if isinstance(head, ResumeTicket) and paged.scheduler.num_active:
+            waited += 1                         # ticket parked behind elder
+    assert paged.scheduler.idle
+    got = {r.rid: r.tokens for r in paged._done}
+    assert paged.preemptions >= 1 and paged.resumes >= 1
+    assert waited >= 1                          # the wait actually happened
+    for r in reqs:
+        assert got[r.rid] == want[r.rid], r.rid
+    assert paged.alloc.pages_in_use == 0
+
+
+def test_cancel_while_spilled_frees_ticket_and_payload(tiny_lm):
+    """Cancelling a preempted (spilled) request drops its ticket from the
+    queue, emits its pre-preemption partial tokens, and leaves the pool
+    clean — the host payload dies with the ticket."""
+    cfg, model, params = tiny_lm
+    reqs = _requests(cfg, lens=[13, 13], gens=[8, 8])
+    paged = Engine(model, params, EngineConfig(
+        num_slots=2, max_len=32, kv_layout="paged", page_size=8,
+        prefix_caching=False))
+    paged.warmup(reqs)
+    for r in reqs:
+        paged.submit(r)
+    paged.step()
+    paged.step()
+    victim = paged.scheduler.active_slots()[-1]
+    rid = paged.scheduler.slots[victim].request.rid
+    pre_tokens = list(paged._results[rid].tokens)
+    paged._preempt(victim)                      # spill to a host ticket
+    assert isinstance(paged.scheduler.peek(), ResumeTicket)
+    assert paged.cancel(rid)
+    assert paged.scheduler.peek() is None or not isinstance(
+        paged.scheduler.peek(), ResumeTicket)   # ticket gone from the queue
+    paged.check_invariants()
+    out = {r.rid: r for r in paged.run()}
+    assert out[rid].status == "cancelled"
+    assert out[rid].tokens == pre_tokens        # partial tokens survive
+    other = [r for r in out.values() if r.rid != rid][0]
+    assert other.status == "ok" and len(other.tokens) == 8
+    assert paged.alloc.pages_in_use == 0
+    assert paged.resumes == 0                   # the ticket never resumed

@@ -37,9 +37,17 @@ rows (same trace through the paged pool) carrying ``page_stats``.
 Emits ``results/BENCH_engine.json`` via the shared emitter (CI uploads it
 next to the other BENCH artifacts). A greedy parity check against the
 static serving path runs on the first few requests of the dense trace —
-the engine must be bit-identical per request.
+the engine must be bit-identical per request. The engine decodes through
+the fused flash-decode kernel by default, so that slice doubles as the
+fused-vs-reference gate; the INT8 rows additionally rerun their trace
+through the reference dequant-then-attend path (bit-identical greedy
+tokens) and bound the fused decode-logit gap at the 0.05·scale tolerance
+test_engine.py uses. Every throughput row carries per-status token
+accounting (``tokens_by_status``, ``ok_tok_per_s``) so scenarios that
+shed or fault stay comparable to their fault-free baselines.
 """
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -52,6 +60,32 @@ from repro.launch.serve import (build_trace, make_step_fns,
                                 static_greedy_reference)
 from repro.models import build_model
 from repro.serving import Engine, EngineConfig
+
+
+def _throughput(results, wall):
+    """Per-status token accounting for a driven trace.
+
+    ``wall`` spans the whole drive — including queue residency of requests
+    that end rejected/errored with zero or partial tokens — so the
+    all-results ``tok_per_s`` understates decode speed on any trace that
+    sheds or faults. ``ok_tok_per_s`` divides only completed requests'
+    tokens by the same wall, which is what makes the chaos/overload rows
+    comparable to their fault-free baselines; ``tokens_by_status`` keeps
+    the gap auditable (partial tokens from cancelled/errored requests are
+    visible instead of silently folded into one number)."""
+    tok_by_status = {}
+    for r in results:
+        tok_by_status[r.status] = (tok_by_status.get(r.status, 0)
+                                   + len(r.tokens))
+    n_tok = sum(tok_by_status.values())
+    w = max(wall, 1e-9)
+    return {
+        "generated_tokens": n_tok,
+        "tokens_by_status": tok_by_status,
+        "wall_s": wall,
+        "tok_per_s": n_tok / w,
+        "ok_tok_per_s": tok_by_status.get("ok", 0) / w,
+    }
 
 
 def run_engine(model, params, cfg, ecfg: EngineConfig, reqs):
@@ -74,16 +108,13 @@ def run_engine(model, params, cfg, ecfg: EngineConfig, reqs):
         statuses[r.status] = statuses.get(r.status, 0) + 1
     lats = sorted(r.latency for r in done) or [0.0]
     ttfts = sorted(r.ttft for r in done) or [0.0]
-    n_tok = sum(len(r.tokens) for r in results)
     compiled = dict(engine.compile_counts())
     counts_known = all(v is not None for v in compiled.values())
     qs = engine.queue_stats()
     return {
         "requests": len(results),
         "statuses": statuses,
-        "generated_tokens": n_tok,
-        "wall_s": wall,
-        "tok_per_s": n_tok / wall,
+        **_throughput(results, wall),
         "latency_p50_ms": 1e3 * lats[len(lats) // 2],
         "latency_p99_ms": 1e3 * lats[min(len(lats) - 1,
                                          int(len(lats) * 0.99))],
@@ -116,6 +147,45 @@ def check_parity(model, params, reqs, results, max_len, n_check: int,
         assert by_rid[req.rid] == ref, \
             f"engine/static divergence rid={req.rid}: {by_rid[req.rid]} != {ref}"
     return n_check
+
+
+def check_fused_reference_tokens(model, params, cfg, ecfg, reqs, results):
+    """Rerun the identical trace through the reference dequant-then-attend
+    path (``use_fused_decode=False``) and require greedy outputs
+    bit-identical per request. Applied to the INT8 rows, where the static
+    oracle doesn't cover the quantized storage."""
+    ref_cfg = dataclasses.replace(ecfg, use_fused_decode=False)
+    _, ref_results = run_engine(model, params, cfg, ref_cfg, reqs)
+    ref = {r.rid: r.tokens for r in ref_results}
+    got = {r.rid: r.tokens for r in results}
+    assert got == ref, "fused INT8 decode diverged from the reference path"
+    return len(ref)
+
+
+def check_int8_fused_logits(model, params, cfg, max_len):
+    """One decode step over a shared INT8 cache, fused vs reference read:
+    logits must agree within the 0.05·scale bound test_engine.py enforces
+    for quantized storage. The measured gap is ~1e-6 — the kernel's
+    in-tile dequant reproduces the reference expansion's op order — and
+    lands in the JSON so regressions are visible, not just pass/fail."""
+    from repro.serving.kv_cache import KVCacheConfig, init_slot_cache
+    rng = np.random.default_rng(7)
+    toks = jnp.asarray(rng.integers(1, cfg.vocab_size, size=(2, 12)),
+                       jnp.int32)
+    cache = init_slot_cache(cfg, KVCacheConfig(num_slots=2, max_len=max_len,
+                                               quantized=True))
+    # static-style scalar pos: multi-token prefill writes need it (the
+    # per-slot vector path is one token per step); decode broadcasts it
+    cache["pos"] = jnp.zeros((), jnp.int32)
+    logits, cache = jax.jit(model.prefill)(params, {"tokens": toks}, cache)
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    fused_m = dataclasses.replace(model, use_fused_decode=True)
+    d_ref, _ = jax.jit(model.decode_step)(params, tok, cache)
+    d_fused, _ = jax.jit(fused_m.decode_step)(params, tok, cache)
+    scale = float(jnp.abs(d_ref).max())
+    gap = float(jnp.abs(d_fused - d_ref).max())
+    assert gap < 0.05 * scale, (gap, scale)
+    return gap, scale
 
 
 def burst_scenario(model, params, cfg, *, slots, burst, plen, gen, seed=1):
@@ -270,14 +340,11 @@ def _result_row(engine, results, wall):
     for r in results:
         statuses[r.status] = statuses.get(r.status, 0) + 1
     lats = sorted(r.latency for r in done) or [0.0]
-    n_tok = sum(len(r.tokens) for r in results)
     qs = engine.queue_stats()
     return {
         "requests": len(results),
         "statuses": statuses,
-        "generated_tokens": n_tok,
-        "wall_s": wall,
-        "tok_per_s": n_tok / max(wall, 1e-9),
+        **_throughput(results, wall),
         "latency_p50_ms": 1e3 * lats[len(lats) // 2],
         "slot_utilization": engine.utilization(),
         "queue_depth_peak": qs["peak"],
@@ -398,15 +465,24 @@ def main():
                             kv_layout=layout, page_size=page)
         rows[name], results = run_engine(model, params, cfg, ecfg, reqs)
         if name == "dense" and args.parity_check:
-            # bf16 cache rounds K/V — rerun the parity slice on an f32 cache
+            # bf16 cache rounds K/V — rerun the parity slice on an f32
+            # cache. The engine decodes FUSED (use_fused_decode defaults
+            # on) while static_greedy_reference runs the unfused reference
+            # model, so this is the fused-vs-reference greedy gate.
             ecfg32 = EngineConfig(num_slots=args.slots, max_len=max_len,
                                   kv_dtype=jnp.float32)
             _, res32 = run_engine(model, params, cfg, ecfg32, reqs)
             n = check_parity(model, params, reqs, res32, max_len,
                              args.parity_check,
                              step_fns=make_step_fns(model))
-            print(f"  parity: {n}/{n} requests bit-identical to the "
-                  f"static path (f32 KV)")
+            print(f"  parity: {n}/{n} fused-engine requests bit-identical "
+                  f"to the reference static path (f32 KV)")
+        if quant:
+            n = check_fused_reference_tokens(model, params, cfg, ecfg,
+                                             reqs, results)
+            rows[name]["fused_parity_checked"] = n
+            print(f"  parity: {name} fused == reference path for "
+                  f"{n}/{n} requests (greedy tokens)")
         r = rows[name]
         print(f"  {name:11s} {r['tok_per_s']:8.0f} tok/s   "
               f"p50 {r['latency_p50_ms']:7.1f}ms   "
@@ -414,6 +490,12 @@ def main():
               f"util {r['slot_utilization']:.2f}   "
               f"kv {r['kv_cache_bytes'] / 1e6:6.2f}MB   "
               f"recompiled={r['recompiled_after_warmup']}")
+
+    gap, lscale = check_int8_fused_logits(model, params, cfg, max_len)
+    rows["int8"]["fused_logit_gap"] = gap
+    rows["int8"]["fused_logit_bound"] = 0.05 * lscale
+    print(f"  parity: int8 fused decode logits within {gap:.2e} of the "
+          f"reference read (bound {0.05 * lscale:.2e})")
 
     ratio = rows["dense"]["kv_cache_bytes"] / max(rows["int8"]["kv_cache_bytes"], 1)
     assert rows["int8"]["kv_cache_bytes"] < rows["dense"]["kv_cache_bytes"], \
@@ -458,7 +540,11 @@ def main():
     chaos = chaos_scenario(model, params, cfg)
     cps = chaos["page_stats"]
     print(f"  chaos (seeded faults {chaos['faults_fired']}): "
-          f"statuses {chaos['statuses']}, {cps['preemptions']} preemptions, "
+          f"statuses {chaos['statuses']}, "
+          f"tokens by status {chaos['tokens_by_status']}, "
+          f"{chaos['ok_tok_per_s']:.0f} completed-tok/s "
+          f"(vs {chaos['tok_per_s']:.0f} all-tok/s), "
+          f"{cps['preemptions']} preemptions, "
           f"{chaos['rejected']} shed, cancel rid={chaos['cancelled_rid']}, "
           f"invariants held every step, "
           f"parity {chaos['parity_checked']} survivors")

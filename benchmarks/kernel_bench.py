@@ -10,12 +10,19 @@ import numpy as np
 from benchmarks.common import emit_json, timed
 from repro.kernels import ops
 from repro.quant.qtensor import QTensor
+from repro.serving.kv_cache import kv_quantize
+
+_BACKEND = jax.default_backend()
+_INTERPRET = ops._interpret()
 
 
 def _row(name, us, derived_value, derived_unit):
+    # every row carries where it ran: Pallas kernels execute in interpret
+    # mode off-TPU, so CPU µs are comparable only to other interpret rows
     return {"kernel": name, "us_per_call": round(us, 1),
             "derived_value": round(derived_value, 1),
-            "derived_unit": derived_unit}
+            "derived_unit": derived_unit,
+            "backend": _BACKEND, "interpret": _INTERPRET}
 
 
 def run():
@@ -63,6 +70,61 @@ def run():
                                               128, use_pallas=use))
         rows.append(_row(f"dequant_matmul[{'pallas' if use else 'jnp'}]", us,
                          2 * 64 * m * k / us / 1e3, "GFLOP/s"))
+
+    rows += _decode_attn_rows(rng)
+    return rows
+
+
+def _decode_attn_rows(rng):
+    """Fused flash-decode vs reference dequant-then-attend over the
+    slot/paged × dense/INT8 matrix at two cache depths. Derived metric is
+    effective KV bandwidth (bytes the dense read would stream) — decode
+    attention is memory-bound, so that's the roofline axis. Each fused/ref
+    pair is allclose-checked before timing (the benchmark doubles as an
+    interpret-mode parity gate)."""
+    b, hk, g, d, page = 8, 4, 4, 64, 16
+    h = hk * g
+    rows = []
+    for t in (128, 512):
+        q = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+        kc = jnp.asarray(rng.normal(size=(b, t, hk, d)), jnp.float32)
+        vc = jnp.asarray(rng.normal(size=(b, t, hk, d)), jnp.float32)
+        lens = jnp.asarray(rng.integers(1, t + 1, size=b), jnp.int32)
+        kv_bytes = 2 * b * t * hk * d * 4            # dense f32 K+V stream
+        qk, qv = kv_quantize(kc, d), kv_quantize(vc, d)
+        qargs = dict(k_scale=qk.scale, k_zero=qk.zero, v_scale=qv.scale,
+                     v_zero=qv.zero, group_size=d)
+
+        # paged pool: identity page mapping is enough for timing — the
+        # kernel's gather cost doesn't depend on the permutation
+        npg = t // page
+        pool_k = kc.reshape(b * npg, page, hk, d)
+        pool_v = vc.reshape(b * npg, page, hk, d)
+        table = jnp.arange(b * npg, dtype=jnp.int32).reshape(b, npg)
+        pk, pv = kv_quantize(pool_k, d), kv_quantize(pool_v, d)
+        pargs = dict(k_scale=pk.scale, k_zero=pk.zero, v_scale=pv.scale,
+                     v_zero=pv.zero, group_size=d)
+
+        cases = [
+            ("slot_dense", lambda use: ops.decode_attn(
+                q, kc, vc, lens, use_pallas=use)),
+            ("slot_int8", lambda use: ops.decode_attn(
+                q, qk.codes, qv.codes, lens, use_pallas=use, **qargs)),
+            ("paged_dense", lambda use: ops.decode_attn_paged(
+                q, pool_k, pool_v, table, lens, use_pallas=use)),
+            ("paged_int8", lambda use: ops.decode_attn_paged(
+                q, pk.codes, pv.codes, table, lens, use_pallas=use,
+                **pargs)),
+        ]
+        for name, fn in cases:
+            np.testing.assert_allclose(np.asarray(fn(True)),
+                                       np.asarray(fn(False)),
+                                       atol=1e-4, rtol=1e-4)
+            for use in (True, False):
+                us = timed(lambda: fn(use))
+                label = "fused" if use else "ref"
+                rows.append(_row(f"decode_attn_{name}_t{t}[{label}]", us,
+                                 kv_bytes / us / 1e3, "GB/s"))
     return rows
 
 

@@ -16,6 +16,7 @@ from repro.kernels import topk_mask as _topk
 from repro.kernels import quant_proj as _quant
 from repro.kernels import dequant_matmul as _dq
 from repro.kernels import kv_dequant as _kv
+from repro.kernels import decode_attn as _da
 from repro.kernels import ref
 
 
@@ -65,6 +66,62 @@ def kv_dequant(codes, scale, zero, group_size: int, use_pallas: bool = True):
                           interpret=_interpret())
 
 
+def _ref_dequant_kv(codes, scale, zero, group_size: int):
+    """(B, T, Hk, D) codes + (B, T, Hk, D/g) planes → dense f32, via the
+    flattened-row reference expansion (the dequant-then-attend oracle)."""
+    lead = codes.shape[:-1]
+    rows = 1
+    for s in lead:
+        rows *= s
+    flat = ref.kv_dequant(codes.reshape(rows, codes.shape[-1]),
+                          scale.reshape(rows, -1), zero.reshape(rows, -1),
+                          group_size)
+    return flat.reshape(codes.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("group_size", "block_t",
+                                             "use_pallas"))
+def decode_attn(q, k, v, lengths, k_scale=None, k_zero=None, v_scale=None,
+                v_zero=None, group_size: int = 0, block_t: int = 256,
+                use_pallas: bool = True):
+    """Fused flash-decode over a slot-layout cache: q (B, H, D) one token
+    per row against k/v (B, T, Hk, D) — dense floats, or uint8 codes with
+    per-head-group scale/zero planes dequantized in-tile. ``lengths`` (B,)
+    bounds each row's K loop (length 0 → zero output). The jnp oracle
+    (``use_pallas=False``) dequantizes then attends — the pre-fusion
+    reference path."""
+    if not use_pallas:
+        if k_scale is not None:
+            k = _ref_dequant_kv(k, k_scale, k_zero, group_size)
+            v = _ref_dequant_kv(v, v_scale, v_zero, group_size)
+        return ref.decode_attn(q, k, v, lengths)
+    return _da.flash_decode(q, k, v, lengths, k_scale=k_scale, k_zero=k_zero,
+                            v_scale=v_scale, v_zero=v_zero,
+                            group_size=group_size, block_t=block_t,
+                            interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("group_size", "use_pallas"))
+def decode_attn_paged(q, k, v, table, lengths, k_scale=None, k_zero=None,
+                      v_scale=None, v_zero=None, group_size: int = 0,
+                      use_pallas: bool = True):
+    """Paged fused flash-decode: k/v are per-layer page pools
+    (P, page, Hk, D) (same dense/INT8 split as :func:`decode_attn`) and
+    ``table`` (B, n_pages) int32 routes each row's positions to physical
+    pages — gathered tile-by-tile in the kernel's index maps, sentinel
+    entries (== P) masked. The oracle gathers the contiguous view then
+    dequantizes and attends."""
+    if not use_pallas:
+        if k_scale is not None:
+            k = _ref_dequant_kv(k, k_scale, k_zero, group_size)
+            v = _ref_dequant_kv(v, v_scale, v_zero, group_size)
+        return ref.decode_attn_paged(q, k, v, table, lengths)
+    return _da.flash_decode(q, k, v, lengths, k_scale=k_scale, k_zero=k_zero,
+                            v_scale=v_scale, v_zero=v_zero,
+                            group_size=group_size, table=table,
+                            interpret=_interpret())
+
+
 def awp_prune_fused(w, c, k: int, eta, iters: int, theta0=None,
                     use_pallas: bool = True):
     """Full AWP pruning loop on the kernel path: fused PGD step + bisection
@@ -78,4 +135,5 @@ def awp_prune_fused(w, c, k: int, eta, iters: int, theta0=None,
 
 
 __all__ = ["awp_pgd_step", "topk_row", "quant_project", "dequant_matmul",
-           "kv_dequant", "awp_prune_fused"]
+           "kv_dequant", "decode_attn", "decode_attn_paged",
+           "awp_prune_fused"]

@@ -43,5 +43,44 @@ def kv_dequant(codes, scale, zero, group_size):
     return deq.reshape(r, k)
 
 
+def decode_attn(q, k, v, lengths):
+    """Length-masked decode attention: q (B, H, D) one token per row against
+    dense k/v (B, T, Hk, D); row b attends positions [0, lengths[b]).
+    Rows with length 0 emit exactly-zero output (the fused kernel's
+    contract for parked slots)."""
+    b, h, d = q.shape
+    t, hk = k.shape[1], k.shape[2]
+    g = h // hk
+    qh = q.reshape(b, hk, g, d).astype(jnp.float32)
+    s = jnp.einsum("bkgd,btkd->bkgt", qh, k.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.float32(d))
+    valid = jnp.arange(t)[None, :] < lengths[:, None]        # (B, T)
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - jnp.where(jnp.isfinite(m), m, 0.0))
+    p = jnp.where(valid[:, None, None, :], p, 0.0)
+    l = p.sum(axis=-1, keepdims=True)
+    pv = jnp.einsum("bkgt,btkd->bkgd", p, v.astype(jnp.float32))
+    # zeros only for the exact l == 0 (length-0 row) case; a NaN l —
+    # poisoned cache rows — must propagate to the logits (engine guard)
+    dead = l == 0.0
+    out = jnp.where(dead, 0.0, pv / jnp.where(dead, 1.0, l))
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+def decode_attn_paged(q, k_pool, v_pool, table, lengths):
+    """Paged mirror of :func:`decode_attn`: per-layer pools (P, page, Hk, D)
+    gathered through ``table`` (B, n_pages) int32 into each row's contiguous
+    view (sentinel entries == P clip to the last physical page — always
+    masked by ``lengths``)."""
+    b, npg = table.shape
+    p_num, page = k_pool.shape[0], k_pool.shape[1]
+    tbl = jnp.minimum(table, p_num - 1)
+    def gather(pool):
+        g = pool[tbl]                                 # (B, npg, page, Hk, D)
+        return g.reshape(b, npg * page, *pool.shape[2:])
+    return decode_attn(q, gather(k_pool), gather(v_pool), lengths)
+
+
 __all__ = ["awp_pgd_step", "topk_row", "quant_project", "dequant_matmul",
-           "kv_dequant"]
+           "kv_dequant", "decode_attn", "decode_attn_paged"]

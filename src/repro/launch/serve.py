@@ -234,7 +234,8 @@ def _serve_engine(args, cfg, model, params):
                         num_pages=args.pages,
                         prefix_caching=not args.no_prefix_cache,
                         mixed_admission=args.mixed_admission,
-                        max_queue=args.max_queue)
+                        max_queue=args.max_queue,
+                        use_fused_decode=not args.no_fused_decode)
     engine = Engine(model, params, ecfg)
     reqs = build_trace(cfg, num_requests=args.requests,
                        max_prompt=min(args.prompt_len, max_len - args.gen),
@@ -360,6 +361,10 @@ def main():
                     help="engine: bound the admission queue — submissions "
                          "past the bound shed with a 'rejected' status "
                          "(0 -> unbounded)")
+    ap.add_argument("--no-fused-decode", action="store_true",
+                    help="engine: revert decode cache reads to the "
+                         "dequant-then-attend reference path instead of "
+                         "the fused Pallas flash-decode kernel")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)

@@ -18,8 +18,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.quant import QTensor
-from repro.serving.kv_cache import (QuantizedKV, kv_dequantize, kv_update,
-                                    kv_quantize, paged_view)
+from repro.serving.kv_cache import (QuantizedKV, fused_decode_attn,
+                                    kv_dequantize, kv_update, kv_quantize,
+                                    paged_view)
 from repro.sharding import ShardingRules, NO_RULES, hint
 
 
@@ -350,7 +351,7 @@ def mlp_params(key, cfg, dtype=jnp.float32, d_ff: Optional[int] = None):
 def attn_apply(p, x, cfg, rules: ShardingRules = NO_RULES, *,
                positions=None, capture=None,
                kv_cache=None, cache_pos=None, attend_cache: bool = False,
-               block_table=None,
+               block_table=None, fused_decode: bool = False,
                attn_chunk: int = 1024, attn_p_dtype=jnp.float32):
     """Pre-norm attention block (residual added by caller).
 
@@ -381,6 +382,13 @@ def attn_apply(p, x, cfg, rules: ShardingRules = NO_RULES, *,
     Gathered views hold the same written values at the same positions as a
     slot-cache row (everything else is causally masked), so paged greedy
     output is bit-identical to the slot path, dense and INT8 alike.
+
+    ``fused_decode=True`` routes the s == 1 decode read (slot and paged)
+    through the fused Pallas flash-decode kernel
+    (:func:`~repro.serving.kv_cache.fused_decode_attn`): INT8 codes
+    dequantize in-tile, per-row lengths bound the K loop, and the paged
+    gather happens in the kernel's index maps — no materialized dense KV.
+    False (the default) keeps the dequant-then-attend reference path.
     """
     b, s, d = x.shape
     hd = cfg.resolved_head_dim
@@ -409,13 +417,17 @@ def attn_apply(p, x, cfg, rules: ShardingRules = NO_RULES, *,
         k_cache = paged_write(k_cache, block_table, cache_pos, k, page)
         v_cache = paged_write(v_cache, block_table, cache_pos, v, page)
         if s == 1:
-            k_r = paged_view(k_cache, block_table)
-            v_r = paged_view(v_cache, block_table)
-            if isinstance(k_r, QuantizedKV):
-                k_r = kv_dequantize(k_r, q.dtype)
-                v_r = kv_dequantize(v_r, q.dtype)
-            out = decode_attention(q, k_r, v_r, positions, rules,
-                                   p_dtype=attn_p_dtype)
+            if fused_decode:
+                out = fused_decode_attn(q, k_cache, v_cache, positions,
+                                        table=block_table)
+            else:
+                k_r = paged_view(k_cache, block_table)
+                v_r = paged_view(v_cache, block_table)
+                if isinstance(k_r, QuantizedKV):
+                    k_r = kv_dequantize(k_r, q.dtype)
+                    v_r = kv_dequantize(v_r, q.dtype)
+                out = decode_attention(q, k_r, v_r, positions, rules,
+                                       p_dtype=attn_p_dtype)
         else:
             assert attend_cache, \
                 "paged s > 1 is the chunked-prefill contract (batched " \
@@ -469,6 +481,8 @@ def attn_apply(p, x, cfg, rules: ShardingRules = NO_RULES, *,
             # decode_attention here would materialize (B,H,S,Smax) scores.
             out = flash_attention(q, k, v, causal=True, q_chunk=attn_chunk,
                                   kv_chunk=attn_chunk, p_dtype=attn_p_dtype)
+        elif fused_decode:
+            out = fused_decode_attn(q, k_cache, v_cache, positions)
         else:
             if isinstance(k_cache, QuantizedKV):
                 k_r = kv_dequantize(k_cache, q.dtype)

@@ -31,12 +31,13 @@ def block_params(key, cfg: ModelConfig, dtype=jnp.float32):
 
 def block_apply(p, x, cfg, rules=NO_RULES, *, positions=None, capture=None,
                 kv_cache=None, cache_pos=None, attend_cache: bool = False,
-                block_table=None,
+                block_table=None, fused_decode: bool = False,
                 attn_chunk: int = 1024, attn_p_dtype=jnp.float32):
     a, new_kv = L.attn_apply(p["attn"], x, cfg, rules, positions=positions,
                              capture=capture, kv_cache=kv_cache,
                              cache_pos=cache_pos, attend_cache=attend_cache,
                              block_table=block_table,
+                             fused_decode=fused_decode,
                              attn_chunk=attn_chunk,
                              attn_p_dtype=attn_p_dtype)
     x = x + a
@@ -60,6 +61,12 @@ class DenseModel:
     # single-iteration: used by the dry-run COST lowering, where XLA's
     # cost_analysis counts loop bodies once (see analysis/roofline.py).
     unroll: bool = False
+    # route s == 1 decode cache reads through the fused Pallas flash-decode
+    # kernel (in-tile INT8 dequant, length-bounded K loop) instead of the
+    # dequant-then-attend reference. Off by default so the static paths
+    # keep their exact numerics; the serving engine flips it per
+    # EngineConfig.use_fused_decode.
+    use_fused_decode: bool = False
 
     # -- params ------------------------------------------------------------
     def init(self, key) -> Params:
@@ -199,6 +206,7 @@ class DenseModel:
                                         cache_pos=cache["pos"],
                                         attend_cache=attend_cache,
                                         block_table=table,
+                                        fused_decode=self.use_fused_decode,
                                         attn_chunk=self.attn_chunk,
                                         attn_p_dtype=self.attn_p_dtype)
             return y, (kc2, vc2)

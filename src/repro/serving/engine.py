@@ -97,7 +97,14 @@ class EngineConfig:
     result). 0 → unbounded. ``stall_patience`` is how many consecutive
     no-progress steps :meth:`Engine.run` tolerates with work outstanding
     before raising :class:`EngineStalledError` (early deadlock
-    detection)."""
+    detection).
+
+    ``use_fused_decode`` (default on) routes the decode step's cache read
+    through the fused Pallas flash-decode kernel — INT8 codes dequantize
+    in-tile, per-slot positions bound the K loop, paged tables gather in
+    the kernel — instead of dequantizing/gathering the whole cache then
+    attending. ``False`` is the escape hatch back to the reference
+    dequant-then-attend path (bit-exact pre-fusion numerics)."""
     num_slots: int = 8
     max_len: int = 256
     prompt_buckets: tuple = ()
@@ -112,6 +119,7 @@ class EngineConfig:
     mixed_admission: bool = False      # cross-bucket admission runs
     max_queue: int = 0                 # 0 → unbounded backlog
     stall_patience: int = 8            # no-progress steps before stalling
+    use_fused_decode: bool = True      # fused flash-decode cache reads
 
 
 def batch_buckets(num_slots: int) -> tuple:
@@ -228,10 +236,16 @@ class Engine:
     # -- jitted steps ------------------------------------------------------
     def _make_step_fns(self):
         model, cfg = self.model, self.cfg
+        if getattr(model, "use_fused_decode", None) != cfg.use_fused_decode:
+            # the flag lives on the model dataclass (it's baked into the
+            # decode trace); rebind a per-engine copy, never mutate the
+            # caller's model
+            model = dataclasses.replace(
+                model, use_fused_decode=cfg.use_fused_decode)
         mcfg = model.cfg
         mini_dtype = jnp.float32 if cfg.kv_quantized else cfg.kv_dtype
         if self._paged:
-            return self._make_paged_step_fns(mini_dtype)
+            return self._make_paged_step_fns(mini_dtype, model)
 
         def prefill_fn(params, kv, tokens, lengths, slots, temps, topks,
                        seeds):
@@ -276,15 +290,16 @@ class Engine:
                 jax.jit(chunk_fn, donate_argnums=1),
                 jax.jit(decode_fn, donate_argnums=1))
 
-    def _make_paged_step_fns(self, mini_dtype):
+    def _make_paged_step_fns(self, mini_dtype, model):
         """Paged mirrors of the three step programs. Prefill keeps the
         slot path's math exactly (same dense mini-cache, same per-row
         logit gather) and only the final splice differs — write_pages
         scatters through per-row page maps instead of slot indices — so
         paged greedy output matches the slot engine token for token.
         Chunk and decode route every cache access through a block table
-        (in-tile paged flash / page-gathered decode view)."""
-        model, cfg = self.model, self.cfg
+        (in-tile paged flash / fused or page-gathered decode read).
+        ``model`` is the caller's fused-decode rebind."""
+        cfg = self.cfg
         mcfg = model.cfg
         pg = cfg.page_size
 

@@ -111,6 +111,40 @@ def kv_dequantize(q: QuantizedKV, dtype=jnp.float32) -> jax.Array:
     return flat.reshape(*lead, hk, d).astype(dtype)
 
 
+def fused_decode_attn(q: jax.Array, k_entry, v_entry, positions, *,
+                      table=None, block_t: int = 256) -> jax.Array:
+    """Fused flash-decode read of the cache: one query token per row
+    attends its history in a single Pallas program — INT8 codes dequantize
+    IN-TILE, no materialized dense K/V, per-row lengths bound the K loop.
+
+    q: (B, 1, H, D) (RoPE applied); positions: (B, 1) absolute decode
+    positions (row b's cache holds lengths[b] = positions[b] + 1 live
+    tokens — the current token's K/V must already be written).
+    ``k_entry``/``v_entry`` are the per-layer storage: (B, T, Hk, D) slot
+    rows, or — with ``table`` (B, n_pages) — (P, page, Hk, D) page pools
+    (dense or :class:`QuantizedKV` either way). Returns (B, 1, H, D) in
+    q's dtype. The escape hatch is the caller's: ``use_fused_decode=False``
+    keeps the dequant-then-attend reference path.
+    """
+    from repro.kernels import ops     # local: kernels are TPU-optional
+    lengths = positions[:, 0].astype(jnp.int32) + 1
+    q2 = q[:, 0]
+    quant = isinstance(k_entry, QuantizedKV)
+    kwargs = {}
+    if quant:
+        kwargs = dict(k_scale=k_entry.scale, k_zero=k_entry.zero,
+                      v_scale=v_entry.scale, v_zero=v_entry.zero,
+                      group_size=k_entry.group_size)
+        k_entry, v_entry = k_entry.codes, v_entry.codes
+    if table is not None:
+        out = ops.decode_attn_paged(q2, k_entry, v_entry, table, lengths,
+                                    **kwargs)
+    else:
+        out = ops.decode_attn(q2, k_entry, v_entry, lengths,
+                              block_t=block_t, **kwargs)
+    return out[:, None].astype(q.dtype)
+
+
 def kv_update(q: QuantizedKV, x: jax.Array, pos) -> QuantizedKV:
     """Write new tokens x (B, s, Hk, D) into the (B, T, Hk, D) storage.
 
@@ -364,5 +398,6 @@ def cache_is_finite(cache: dict) -> bool:
 
 __all__ = ["QuantizedKV", "KVCacheConfig", "init_slot_cache", "write_slot",
            "slot_rows", "set_slot_rows", "cache_bytes", "cache_is_finite",
-           "kv_quantize", "kv_dequantize", "kv_update", "init_paged_storage",
-           "write_pages", "paged_view", "take_pages", "put_pages"]
+           "kv_quantize", "kv_dequantize", "kv_update", "fused_decode_attn",
+           "init_paged_storage", "write_pages", "paged_view", "take_pages",
+           "put_pages"]

@@ -59,6 +59,7 @@ from repro.configs import get_tiny_config
 from repro.launch.serve import (build_trace, make_step_fns,
                                 static_greedy_reference)
 from repro.models import build_model
+from repro.obs import hist_quantile, snapshot_series
 from repro.serving import Engine, EngineConfig
 
 
@@ -88,11 +89,40 @@ def _throughput(results, wall):
     }
 
 
+def _registry_stats(engine, results):
+    """Registry-derived slice of a result row: per-status request counts
+    off ``engine_requests_total`` and TTFT percentiles off the
+    ``request_ttft_seconds`` histogram (bucket-interpolated, clamped to
+    the observed min/max). The per-status counts are cross-checked
+    against the results list, so every bench run doubles as a gate that
+    the telemetry agrees with ground truth."""
+    snap = engine.metrics_snapshot()
+    statuses = {}
+    fam = snap["counters"].get("engine_requests_total", {"series": ()})
+    for s in fam["series"]:
+        if s["value"]:
+            statuses[s["labels"]["status"]] = int(s["value"])
+    tally = {}
+    for r in results:
+        tally[r.status] = tally.get(r.status, 0) + 1
+    assert statuses == tally, \
+        f"registry status counts {statuses} != result statuses {tally}"
+    ttft = snapshot_series(snap, "histograms", "request_ttft_seconds")
+    have = ttft is not None and ttft["count"] > 0
+    return {
+        "statuses": statuses,
+        "ttft_p50_ms": 1e3 * hist_quantile(ttft, 0.5) if have else 0.0,
+        "ttft_p99_ms": 1e3 * hist_quantile(ttft, 0.99) if have else 0.0,
+    }
+
+
 def run_engine(model, params, cfg, ecfg: EngineConfig, reqs):
     """One warmed engine pass over the trace → metrics dict. Submission
     goes through ``try_submit``, so with ``max_queue`` set the shed
     requests land in the results as ``rejected`` (and in ``statuses``)
-    instead of raising; latency percentiles cover completed requests."""
+    instead of raising; latency percentiles cover completed requests.
+    Statuses and TTFT percentiles come from the engine's metrics
+    registry (``warmup`` resets it, so they span exactly this trace)."""
     engine = Engine(model, params, ecfg)
     compiled_warm = engine.warmup(reqs)
 
@@ -103,22 +133,17 @@ def run_engine(model, params, cfg, ecfg: EngineConfig, reqs):
     wall = time.perf_counter() - t0
 
     done = [r for r in results if r.ok]
-    statuses = {}
-    for r in results:
-        statuses[r.status] = statuses.get(r.status, 0) + 1
     lats = sorted(r.latency for r in done) or [0.0]
-    ttfts = sorted(r.ttft for r in done) or [0.0]
     compiled = dict(engine.compile_counts())
     counts_known = all(v is not None for v in compiled.values())
     qs = engine.queue_stats()
     return {
         "requests": len(results),
-        "statuses": statuses,
+        **_registry_stats(engine, results),
         **_throughput(results, wall),
         "latency_p50_ms": 1e3 * lats[len(lats) // 2],
         "latency_p99_ms": 1e3 * lats[min(len(lats) - 1,
                                          int(len(lats) * 0.99))],
-        "ttft_p50_ms": 1e3 * ttfts[len(ttfts) // 2],
         "slot_utilization": engine.utilization(),
         "kv_cache_bytes": engine.kv_cache_bytes(),
         "prefill_dispatches": engine.prefill_dispatches,
@@ -334,21 +359,22 @@ def overload_scenario(model, params, cfg, *, requests=8, max_queue=6,
 
 def _result_row(engine, results, wall):
     """Shared row shape for the stepwise-driven scenarios (overload/chaos);
-    mirrors run_engine's metrics without re-submitting."""
+    mirrors run_engine's metrics without re-submitting. Queue depth over
+    time comes off the registry gauge's ring-buffer trace — ``dropped``
+    says how many early samples the ring displaced (0 for these short
+    drives)."""
     done = [r for r in results if r.ok]
-    statuses = {}
-    for r in results:
-        statuses[r.status] = statuses.get(r.status, 0) + 1
     lats = sorted(r.latency for r in done) or [0.0]
     qs = engine.queue_stats()
     return {
         "requests": len(results),
-        "statuses": statuses,
+        **_registry_stats(engine, results),
         **_throughput(results, wall),
         "latency_p50_ms": 1e3 * lats[len(lats) // 2],
         "slot_utilization": engine.utilization(),
         "queue_depth_peak": qs["peak"],
         "queue_depth_mean": qs["mean"],
+        "queue_depth_dropped": qs["dropped"],
         "rejected": qs["rejected"],
         **({"page_stats": ps} if (ps := engine.page_stats()) else {}),
     }, results
@@ -535,6 +561,9 @@ def main():
           f"queue peak {overload['queue_depth_peak']} "
           f"(max_queue {overload['max_queue']}, "
           f"{overload['rejected']} shed), "
+          f"ttft p50 {overload['ttft_p50_ms']:.1f}ms "
+          f"p99 {overload['ttft_p99_ms']:.1f}ms, "
+          f"statuses {overload['statuses']}, "
           f"parity {overload['parity_checked']} reqs")
 
     chaos = chaos_scenario(model, params, cfg)
@@ -544,6 +573,8 @@ def main():
           f"tokens by status {chaos['tokens_by_status']}, "
           f"{chaos['ok_tok_per_s']:.0f} completed-tok/s "
           f"(vs {chaos['tok_per_s']:.0f} all-tok/s), "
+          f"ttft p50 {chaos['ttft_p50_ms']:.1f}ms "
+          f"p99 {chaos['ttft_p99_ms']:.1f}ms, "
           f"{cps['preemptions']} preemptions, "
           f"{chaos['rejected']} shed, cancel rid={chaos['cancelled_rid']}, "
           f"invariants held every step, "

@@ -29,6 +29,7 @@ from repro.core.specs import Policy, QuantSpec
 from repro.launch.serve import (make_step_fns, packed_weight_bytes,
                                 qtensor_leaves)
 from repro.models import build_model, make_batch
+from repro.obs import MetricsRegistry, snapshot_series
 
 
 def bench_serving(model, params, prompts, gen_len: int, reps: int = 2):
@@ -69,9 +70,26 @@ def main():
     model = build_model(cfg, remat=False)
     params = model.init(jax.random.PRNGKey(0))
     calib = [make_batch(cfg, jax.random.PRNGKey(1), 4, args.prompt_len)]
+    reg = MetricsRegistry()
     cp, report = compress_model(
         model, params, calib,
-        Policy({"*": QuantSpec(method="rtn", bits=4, group_size=32)}))
+        Policy({"*": QuantSpec(method="rtn", bits=4, group_size=32)}),
+        metrics=reg)
+    # compression telemetry off the registry the compress pass recorded
+    # into: layer count, mean residual, dispatch wall per engine
+    snap = reg.snapshot()
+    res_h = snapshot_series(snap, "histograms", "compress_residual")
+    blk_h = snapshot_series(snap, "histograms", "compress_block_seconds")
+    layers = snapshot_series(snap, "counters", "compress_layers_total")
+    compression = {
+        "layers": int(layers["value"]) if layers else 0,
+        "mean_residual": (res_h["sum"] / res_h["count"]
+                          if res_h and res_h["count"] else 0.0),
+        "block_seconds": blk_h["sum"] if blk_h else 0.0,
+        "blocks": int(blk_h["count"]) if blk_h else 0,
+    }
+    assert compression["layers"] == len(report), \
+        "compression telemetry must count every compressed layer"
     path = save_packed_checkpoint(tempfile.mkdtemp(prefix="serve_bench_"),
                                   0, cp, report)
     packed_params, qts, _ = load_packed_checkpoint(path, params)
@@ -92,11 +110,16 @@ def main():
     for name, pre, dec, wb in rows:
         print(f"  {name:7s} prefill {pre:8.0f} tok/s   decode {dec:8.0f} "
               f"tok/s   quantized-layer weights {wb / 1e6:7.2f} MB")
+    print(f"  compress {compression['layers']} layers in "
+          f"{compression['blocks']} blocks, "
+          f"{compression['block_seconds']:.2f}s dispatch wall, "
+          f"mean residual {compression['mean_residual']:.3e}")
 
     out = emit_json("serve", {
         "arch": args.arch,
         "batch": args.batch, "prompt_len": args.prompt_len, "gen": args.gen,
         "n_qtensor_leaves": n_qleaves,
+        "compression": compression,
         "dense": {"prefill_tok_s": dense_pre, "decode_tok_s": dense_dec,
                   "weight_bytes": dense_equiv},
         "packed": {"prefill_tok_s": packed_pre, "decode_tok_s": packed_dec,

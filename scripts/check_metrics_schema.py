@@ -1,0 +1,135 @@
+#!/usr/bin/env python
+"""Validate a MetricsRegistry snapshot JSON against the checked-in schema.
+
+CI runs this on the ``--metrics-json`` artifacts that ``repro.launch.serve``
+and ``repro.launch.compress`` emit, so the snapshot shape is a contract:
+dashboards and downstream tooling can rely on it across PRs.
+
+    python scripts/check_metrics_schema.py SNAP.json \
+        [--schema scripts/metrics_schema.json] \
+        [--require counters:engine_requests_total ...] \
+        [--prom SNAP.json.prom --prom-require engine_requests_total ...]
+
+The validator is a dependency-free subset of JSON Schema — ``type``,
+``required``, ``properties``, ``additionalProperties`` (false or a schema),
+``items``, ``enum``, ``minimum`` — which is all the schema file uses. On
+top of the shape check it enforces histogram semantics the schema language
+can't express: ``len(counts) == len(le) + 1`` (overflow slot) and
+``count == sum(counts)``.  ``--require KIND:NAME`` asserts a metric family
+is present; ``--prom-require NAME`` greps the text exposition for a family.
+"""
+import argparse
+import json
+import sys
+
+_TYPES = {
+    "object": dict,
+    "array": list,
+    "string": str,
+    "integer": int,
+    "number": (int, float),
+    "boolean": bool,
+    "null": type(None),
+}
+
+
+def validate(value, schema, path="$"):
+    """Yield 'path: problem' strings; empty == valid."""
+    typ = schema.get("type")
+    if typ is not None:
+        expected = _TYPES[typ]
+        ok = isinstance(value, expected)
+        if ok and typ in ("integer", "number") and isinstance(value, bool):
+            ok = False                       # bool is not a JSON number here
+        if typ == "number" and isinstance(value, bool):
+            ok = False
+        if not ok:
+            yield f"{path}: expected {typ}, got {type(value).__name__}"
+            return
+    if "enum" in schema and value not in schema["enum"]:
+        yield f"{path}: {value!r} not in enum {schema['enum']}"
+    if "minimum" in schema and isinstance(value, (int, float)) \
+            and not isinstance(value, bool) and value < schema["minimum"]:
+        yield f"{path}: {value} < minimum {schema['minimum']}"
+    if isinstance(value, dict):
+        props = schema.get("properties", {})
+        for key in schema.get("required", ()):
+            if key not in value:
+                yield f"{path}: missing required key {key!r}"
+        addl = schema.get("additionalProperties", True)
+        for key, sub in value.items():
+            if key in props:
+                yield from validate(sub, props[key], f"{path}.{key}")
+            elif addl is False:
+                yield f"{path}: unexpected key {key!r}"
+            elif isinstance(addl, dict):
+                yield from validate(sub, addl, f"{path}.{key}")
+    if isinstance(value, list) and "items" in schema:
+        for i, item in enumerate(value):
+            yield from validate(item, schema["items"], f"{path}[{i}]")
+
+
+def histogram_semantics(snap):
+    for name, fam in snap.get("histograms", {}).items():
+        for i, s in enumerate(fam.get("series", ())):
+            where = f"$.histograms.{name}.series[{i}]"
+            if len(s["counts"]) != len(s["le"]) + 1:
+                yield (f"{where}: {len(s['counts'])} count slots for "
+                       f"{len(s['le'])} bounds (need bounds+1)")
+            if sum(s["counts"]) != s["count"]:
+                yield f"{where}: count {s['count']} != sum(counts)"
+            if list(s["le"]) != sorted(s["le"]):
+                yield f"{where}: bucket bounds not sorted"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("snapshot", help="metrics snapshot JSON to validate")
+    ap.add_argument("--schema", default="scripts/metrics_schema.json")
+    ap.add_argument("--require", action="append", default=[],
+                    metavar="KIND:NAME",
+                    help="assert a family exists, e.g. "
+                         "counters:engine_requests_total")
+    ap.add_argument("--prom", default="",
+                    help="also check a Prometheus text exposition file")
+    ap.add_argument("--prom-require", action="append", default=[],
+                    metavar="NAME", help="family that must appear in --prom")
+    args = ap.parse_args()
+
+    with open(args.schema) as f:
+        schema = json.load(f)
+    with open(args.snapshot) as f:
+        snap = json.load(f)
+
+    errors = list(validate(snap, schema))
+    errors += list(histogram_semantics(snap))
+    for req in args.require:
+        kind, _, name = req.partition(":")
+        if name not in snap.get(kind, {}):
+            errors.append(f"missing required family {kind}:{name}")
+        elif not snap[kind][name].get("series"):
+            errors.append(f"required family {kind}:{name} has no series")
+
+    if args.prom:
+        with open(args.prom) as f:
+            text = f.read()
+        families = {line.split()[2] for line in text.splitlines()
+                    if line.startswith("# TYPE ")}
+        for name in args.prom_require:
+            if name not in families:
+                errors.append(f"exposition {args.prom}: missing family "
+                              f"{name} (have {sorted(families)})")
+
+    if errors:
+        for e in errors:
+            print(f"[metrics-schema] FAIL {e}", file=sys.stderr)
+        sys.exit(1)
+    n_fams = sum(len(snap.get(k, {}))
+                 for k in ("counters", "gauges", "histograms"))
+    print(f"[metrics-schema] OK {args.snapshot}: {n_fams} families, "
+          f"{len(args.require)} required present"
+          + (f", exposition {args.prom} ok" if args.prom else ""))
+
+
+if __name__ == "__main__":
+    main()

@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -67,17 +68,40 @@ def bucket_works(works: Sequence[LayerWork]) -> Dict[tuple, List[int]]:
     return buckets
 
 
-def compress_block(works: Sequence[LayerWork]):
+def compress_block(works: Sequence[LayerWork], metrics=None):
     """Compress every queued linear; returns per-work (CompressResult, loss).
 
     Results line up with ``works`` order. Losses are DEVICE scalars — the
     driver materializes them (with the rest of the block's metrics) in one
     transfer at the block boundary.
+
+    ``metrics`` (a :class:`repro.obs.MetricsRegistry`) receives per-bucket
+    telemetry: bucket count, size, and dispatch wall time. The wall time
+    covers program construction + dispatch only — the deferred host sync
+    lands in the driver's block boundary, so per-bucket seconds understate
+    true device time (documented in docs/observability.md).
     """
     out: List[Optional[tuple]] = [None] * len(works)
-    for idxs in bucket_works(works).values():
+    for (shape, spec), idxs in bucket_works(works).items():
         bucket = [works[j] for j in idxs]
+        t0 = time.perf_counter()
         results, losses = _compress_bucket(bucket)
+        if metrics is not None:
+            lab = {"method": spec.method,
+                   "shape": "x".join(str(d) for d in shape)}
+            names = ("method", "shape")
+            metrics.counter("compress_buckets_total",
+                            "shape/spec buckets dispatched",
+                            labelnames=names).labels(**lab).inc()
+            metrics.counter("compress_bucket_layers_total",
+                            "layers routed through each bucket",
+                            labelnames=names).labels(**lab).inc(len(bucket))
+            metrics.histogram(
+                "compress_bucket_seconds",
+                "per-bucket dispatch wall (host syncs deferred to the "
+                "block boundary)", labelnames=names,
+                unit="seconds").labels(**lab).observe(
+                    time.perf_counter() - t0)
         for pos, j in enumerate(idxs):
             out[j] = (results[pos], losses[pos])
     return out

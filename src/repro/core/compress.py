@@ -23,6 +23,7 @@ materializes for serving.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Any, Dict, List, Optional, Union
@@ -31,6 +32,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import (ITER_BUCKETS, RESIDUAL_BUCKETS, MetricsRegistry,
+                       default_registry, trace_window)
 from repro.core import awp, calibration as calib, registry
 from repro.core import baselines  # noqa: F401  — registers built-in methods
 from repro.core.specs import (CompressSpec, Policy, effective_group,
@@ -337,9 +340,37 @@ def _block_works(model, params, block_idx: int, stats, policy: Policy):
     return [wk for wk, n in zip(works, ns) if n >= 1]   # never routed: dense
 
 
+def _record_layer_metrics(metrics: Optional[MetricsRegistry], method: str,
+                          loss: float, seconds: float, iters) -> None:
+    """Per-layer convergence telemetry: how many PGD iterations the layer
+    took, what residual it converged to, and its (possibly block-amortized)
+    wall time — the measurements the paper's per-layer claims rest on."""
+    if metrics is None:
+        return
+    lab = {"method": method}
+    metrics.counter("compress_layers_total", "layers compressed",
+                    labelnames=("method",)).labels(**lab).inc()
+    metrics.histogram(
+        "compress_residual",
+        "normalized activation-aware loss after compression",
+        labelnames=("method",),
+        buckets=RESIDUAL_BUCKETS).labels(**lab).observe(loss)
+    metrics.histogram(
+        "compress_layer_seconds",
+        "per-layer compression wall time (batched: block time amortized)",
+        labelnames=("method",), unit="seconds").labels(**lab).observe(seconds)
+    if iters is not None:
+        metrics.histogram(
+            "compress_pgd_iters",
+            "projected-gradient iterations to convergence",
+            labelnames=("method",),
+            buckets=ITER_BUCKETS).labels(**lab).observe(int(iters))
+
+
 def _compress_block_batched(model, params, block_idx: int, stats,
                             policy: Policy, report: CompressionReport,
-                            verbose: bool):
+                            verbose: bool,
+                            metrics: Optional[MetricsRegistry] = None):
     """Shape-bucketed block compression: one device program per bucket, all
     host syncs (metrics, masks, routing guard) amortized to block scope."""
     from repro.core import batched as _batched
@@ -347,7 +378,7 @@ def _compress_block_batched(model, params, block_idx: int, stats,
     works = _block_works(model, params, block_idx, stats, policy)
     if not works:
         return params
-    outcomes = _batched.compress_block(works)
+    outcomes = _batched.compress_block(works, metrics=metrics)
 
     # grouped write-back: every update targeting the same stacked leaf (all
     # E experts of a block, q/k/v of one attn dict) lands in one scatter
@@ -384,6 +415,8 @@ def _compress_block_batched(model, params, block_idx: int, stats,
                                          qualname=wk.qname))
         report.artifacts[wk.qname] = LayerArtifact(wk.qname, wk.path,
                                                    wk.layer, wk.spec, res)
+        _record_layer_metrics(metrics, wk.spec.method, loss, seconds,
+                              host["iters"][j])
         if verbose:
             print(f"  block {block_idx} {wk.name} [{wk.spec.method}]: "
                   f"loss={loss:.4f} sparsity={sp:.2f}")
@@ -392,7 +425,8 @@ def _compress_block_batched(model, params, block_idx: int, stats,
 
 def _compress_block_sequential(model, params, block_idx: int, stats,
                                policy: Policy, report: CompressionReport,
-                               verbose: bool):
+                               verbose: bool,
+                               metrics: Optional[MetricsRegistry] = None):
     """Layer-at-a-time reference driver (one program + host sync per layer).
 
     Kept as the numerical baseline the batched engine is benchmarked and
@@ -417,12 +451,15 @@ def _compress_block_sequential(model, params, block_idx: int, stats,
         if res.loss is None:
             res.loss = loss
         sp = float((np.asarray(res.theta) == 0).mean())
+        seconds = time.time() - t0
         report.layers.append(LayerReport(block_idx, name, 0.0, loss, sp,
-                                         time.time() - t0,
+                                         seconds,
                                          method=spec.method,
                                          qualname=qname))
         report.artifacts[qname] = LayerArtifact(qname, tuple(path), layer,
                                                 spec, res)
+        _record_layer_metrics(metrics, spec.method, loss, seconds,
+                              res.iters)
         if verbose:
             print(f"  block {block_idx} {name} [{spec.method}]: "
                   f"loss={loss:.4f} sparsity={sp:.2f}")
@@ -439,7 +476,9 @@ def _compress_block_sequential(model, params, block_idx: int, stats,
 
 def compress_model(model, params, calib_batches: List[dict],
                    policy: PolicyLike, verbose: bool = False,
-                   engine: str = "batched"):
+                   engine: str = "batched",
+                   metrics: Optional[MetricsRegistry] = None,
+                   profile_dir: str = "", profile_block: int = -1):
     """Compress every linear of every block per the policy.
 
     ``engine="batched"`` (default) buckets each block's linears by
@@ -447,10 +486,19 @@ def compress_model(model, params, calib_batches: List[dict],
     host syncs deferred to block boundaries; ``engine="sequential"`` is the
     layer-at-a-time reference driver. Both return the same
     ``(params, CompressionReport)`` with per-layer losses matching to ~1e-5.
+
+    ``metrics`` is the :class:`repro.obs.MetricsRegistry` receiving the
+    convergence telemetry (per-layer PGD iterations/residual/wall time,
+    per-bucket dispatch counts, per-block wall time); defaults to the
+    process-global :func:`repro.obs.default_registry`. ``profile_block``
+    opts one block (capture + compress + propagate) into a
+    ``jax.profiler`` trace window written under ``profile_dir``.
     """
     if engine not in ("batched", "sequential"):
         raise ValueError(f"engine must be 'batched' or 'sequential', "
                          f"got {engine!r}")
+    if metrics is None:
+        metrics = default_registry()
     policy = as_policy(policy)
     # fail fast: unknown methods / method-spec mismatches surface here, not
     # minutes into the block loop
@@ -462,17 +510,27 @@ def compress_model(model, params, calib_batches: List[dict],
     report = CompressionReport(policy=policy)
     block_fn = (_compress_block_batched if engine == "batched"
                 else _compress_block_sequential)
+    h_block = metrics.histogram(
+        "compress_block_seconds",
+        "per-block wall time: capture + compress + propagate",
+        labelnames=("engine",), unit="seconds").labels(engine=engine)
 
     for i in range(model.num_blocks()):
-        # 1) capture calibration statistics for this block
-        stats: Dict[Any, calib.CalibStats] = {}
-        for h in hs:
-            _, caps = model.block_apply_one(params, i, h, capture=True)
-            _fold_captures(stats, caps, num_experts)
-        # 2) compress each linear per its policy rule
-        params = block_fn(model, params, i, stats, policy, report, verbose)
-        # 3) propagate compressed activations to the next block
-        hs = [model.block_apply_one(params, i, h)[0] for h in hs]
+        ctx = (trace_window(profile_dir) if i == profile_block
+               else contextlib.nullcontext())
+        tb = time.time()
+        with ctx:
+            # 1) capture calibration statistics for this block
+            stats: Dict[Any, calib.CalibStats] = {}
+            for h in hs:
+                _, caps = model.block_apply_one(params, i, h, capture=True)
+                _fold_captures(stats, caps, num_experts)
+            # 2) compress each linear per its policy rule
+            params = block_fn(model, params, i, stats, policy, report,
+                              verbose, metrics=metrics)
+            # 3) propagate compressed activations to the next block
+            hs = [model.block_apply_one(params, i, h)[0] for h in hs]
+        h_block.observe(time.time() - tb)
     return params, report
 
 

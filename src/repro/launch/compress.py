@@ -31,6 +31,7 @@ from repro.core.compress import CompressionConfig, compress_model
 from repro.core.specs import Policy
 from repro.data import DataConfig, ZipfMarkov, calibration_batches
 from repro.models import build_model
+from repro.obs import MetricsRegistry
 
 
 def build_policy(args) -> "Policy | CompressionConfig":
@@ -69,6 +70,15 @@ def main():
                     choices=("batched", "sequential"),
                     help="shape-bucketed batched engine (default) or the "
                          "layer-at-a-time reference driver")
+    ap.add_argument("--metrics-json", default="",
+                    help="write the compression telemetry snapshot as JSON "
+                         "here (plus Prometheus text exposition at "
+                         "PATH.prom)")
+    ap.add_argument("--profile-dir", default="",
+                    help="directory for jax.profiler traces")
+    ap.add_argument("--profile-block", type=int, default=-1,
+                    help="block index to wrap in a jax.profiler trace "
+                         "window (needs --profile-dir; -1 -> off)")
     args = ap.parse_args()
 
     cfg = get_tiny_config(args.arch) if args.tiny else get_config(args.arch)
@@ -99,10 +109,21 @@ def main():
 
     before = ppl(params)
     policy = build_policy(args)
+    reg = MetricsRegistry()
     cp, report = compress_model(model, params, calib, policy, verbose=True,
-                                engine=args.engine)
+                                engine=args.engine, metrics=reg,
+                                profile_dir=args.profile_dir,
+                                profile_block=args.profile_block)
     after = ppl(cp)
     print("[compress] " + report.summary().replace("\n", "\n[compress] "))
+    if args.metrics_json:
+        reg.dump_json(args.metrics_json, meta={
+            "source": "compress", "arch": args.arch, "engine": args.engine,
+            "method": args.method})
+        with open(args.metrics_json + ".prom", "w") as f:
+            f.write(reg.to_prometheus())
+        print(f"[compress] metrics snapshot -> {args.metrics_json} "
+              f"(+ {args.metrics_json}.prom)")
     print(f"[compress] perplexity {before:.3f} -> {after:.3f}")
     if args.save_packed and report.packed_layers():
         path = save_packed_checkpoint(args.out, 0, cp, report)

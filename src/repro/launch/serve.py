@@ -215,7 +215,26 @@ def _verify_against_static(model, params, reqs, results, max_len) -> tuple:
     return bad, checked
 
 
+def _interval_printer(every: int):
+    """Step hook: one-line engine stats every ``every`` steps."""
+    t0 = time.time()
+    n = 0
+
+    def on_step(eng):
+        nonlocal n
+        n += 1
+        if n % every:
+            return
+        print(f"[serve] step {n}: active "
+              f"{eng.scheduler.num_active}/{eng.cfg.num_slots}, queue "
+              f"{len(eng.scheduler.queue)}, decode steps {eng.decode_steps}, "
+              f"util {eng.utilization():.2f}, {time.time() - t0:.1f}s")
+
+    return on_step
+
+
 def _serve_engine(args, cfg, model, params):
+    from repro.obs import StepTraceWindow
     from repro.serving import Engine, EngineConfig
 
     max_len = min(args.max_len, args.prompt_len + args.gen) \
@@ -243,10 +262,26 @@ def _serve_engine(args, cfg, model, params):
                        temperature=args.temperature, top_k=args.top_k)
     compiled = engine.warmup(reqs)
 
+    hooks = []
+    prof = StepTraceWindow(args.profile_dir, args.profile_steps)
+    if prof.enabled:
+        print(f"[serve] profiling first {args.profile_steps} steps -> "
+              f"{args.profile_dir}")
+        prof.start()
+        hooks.append(prof.on_step)
+    if args.metrics_interval > 0:
+        hooks.append(_interval_printer(args.metrics_interval))
+    hook = None
+    if hooks:
+        def hook(eng, _hooks=tuple(hooks)):
+            for h in _hooks:
+                h(eng)
+
     t0 = time.time()
     for r in reqs:
         engine.try_submit(r)           # --max-queue sheds, never raises
-    results = engine.run()
+    results = engine.run(step_hook=hook)
+    prof.stop()                        # no-op unless still inside the window
     wall = time.time() - t0
     after = engine.compile_counts()
 
@@ -303,11 +338,27 @@ def _serve_engine(args, cfg, model, params):
         else:
             bad, checked = _verify_against_static(model, params, reqs,
                                                   results, max_len)
+            for r in sorted(results, key=lambda r: r.rid):
+                print(f"[serve]   rid={r.rid} status={r.status} "
+                      f"queue {r.queue_time * 1e3:.1f}ms "
+                      f"ttft {r.ttft * 1e3:.1f}ms "
+                      f"tpot {r.tpot * 1e3:.2f}ms "
+                      f"({len(r.tokens)} tok)")
             print(f"[serve] verify vs static path: "
                   f"{checked - bad}/{checked} completed requests "
                   f"bit-identical ({len(reqs) - checked} not completed)")
             if bad:
                 raise SystemExit(1)
+
+    if args.metrics_json:
+        engine.metrics_snapshot()      # refresh the state gauges
+        engine.metrics.dump_json(args.metrics_json, meta={
+            "source": "serve", "engine": "continuous", "arch": args.arch,
+            "layout": args.kv, "requests": len(reqs), "wall_s": wall})
+        prom = args.metrics_json + ".prom"
+        with open(prom, "w") as f:
+            f.write(engine.metrics.to_prometheus())
+        print(f"[serve] metrics snapshot -> {args.metrics_json} (+ {prom})")
 
 
 def main():
@@ -365,6 +416,17 @@ def main():
                     help="engine: revert decode cache reads to the "
                          "dequant-then-attend reference path instead of "
                          "the fused Pallas flash-decode kernel")
+    ap.add_argument("--metrics-json", default="",
+                    help="engine: write the registry snapshot as JSON here "
+                         "(plus Prometheus text exposition at PATH.prom)")
+    ap.add_argument("--metrics-interval", type=int, default=0,
+                    help="engine: print one-line stats every N steps "
+                         "(0 -> off)")
+    ap.add_argument("--profile-steps", type=int, default=0,
+                    help="engine: jax.profiler trace window around the "
+                         "first N steps (needs --profile-dir)")
+    ap.add_argument("--profile-dir", default="",
+                    help="directory for jax.profiler traces")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)

@@ -1,0 +1,43 @@
+"""repro.obs — process-local telemetry: metrics, traces, profiling hooks.
+
+Pure host-side Python (no jax imports at module load); safe to import from
+the scheduler, benches, and scripts alike.
+"""
+
+from repro.obs.metrics import (
+    ITER_BUCKETS,
+    LATENCY_BUCKETS,
+    RESIDUAL_BUCKETS,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    RingBuffer,
+    default_registry,
+    hist_quantile,
+    parse_exposition,
+    snapshot_series,
+)
+from repro.obs.profiling import StepTraceWindow, trace_window
+from repro.obs.trace import TERMINAL_STATUSES, Span, Trace, TraceError
+
+__all__ = [
+    "ITER_BUCKETS",
+    "LATENCY_BUCKETS",
+    "RESIDUAL_BUCKETS",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "RingBuffer",
+    "default_registry",
+    "hist_quantile",
+    "parse_exposition",
+    "snapshot_series",
+    "StepTraceWindow",
+    "trace_window",
+    "TERMINAL_STATUSES",
+    "Span",
+    "Trace",
+    "TraceError",
+]

@@ -1,0 +1,87 @@
+"""Opt-in jax.profiler trace windows.
+
+Two shapes:
+
+* ``trace_window(log_dir)`` — context manager around one block of work
+  (used by ``compress_model(profile_block=...)``).
+* ``StepTraceWindow(log_dir, steps)`` — start/step/stop object for wrapping
+  the first N engine steps (used by ``serve.py --profile-steps``); its
+  ``on_step`` method plugs into ``Engine.run(step_hook=...)``.
+
+Both degrade to no-ops when the directory is empty or the profiler is
+unavailable, so telemetry never takes the serving path down.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import sys
+
+__all__ = ["trace_window", "StepTraceWindow"]
+
+
+def _start(log_dir: str) -> bool:
+    try:
+        import jax
+
+        jax.profiler.start_trace(log_dir)
+        return True
+    except Exception as e:  # pragma: no cover - environment dependent
+        print(f"[obs] profiler start failed ({e!r}); continuing unprofiled",
+              file=sys.stderr)
+        return False
+
+
+def _stop() -> None:
+    try:
+        import jax
+
+        jax.profiler.stop_trace()
+    except Exception as e:  # pragma: no cover - environment dependent
+        print(f"[obs] profiler stop failed ({e!r})", file=sys.stderr)
+
+
+@contextlib.contextmanager
+def trace_window(log_dir: str):
+    """Profile the enclosed block into ``log_dir``; no-op if dir is empty."""
+    if not log_dir:
+        yield False
+        return
+    started = _start(log_dir)
+    try:
+        yield started
+    finally:
+        if started:
+            _stop()
+
+
+class StepTraceWindow:
+    """Profile the first ``steps`` engine steps after ``start()``."""
+
+    def __init__(self, log_dir: str, steps: int):
+        self.log_dir = log_dir
+        self.steps = steps
+        self._remaining = 0
+        self._active = False
+
+    @property
+    def enabled(self) -> bool:
+        return bool(self.log_dir) and self.steps > 0
+
+    def start(self) -> None:
+        if not self.enabled or self._active:
+            return
+        self._active = _start(self.log_dir)
+        self._remaining = self.steps
+
+    def on_step(self, engine=None) -> None:
+        if not self._active:
+            return
+        self._remaining -= 1
+        if self._remaining <= 0:
+            self.stop()
+
+    def stop(self) -> None:
+        if self._active:
+            _stop()
+            self._active = False

@@ -56,6 +56,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import MetricsRegistry, Trace
 from repro.serving.kv_cache import (KVCacheConfig, cache_bytes,
                                     init_paged_storage, init_slot_cache,
                                     set_slot_rows, slot_rows, write_pages,
@@ -120,6 +121,7 @@ class EngineConfig:
     max_queue: int = 0                 # 0 → unbounded backlog
     stall_patience: int = 8            # no-progress steps before stalling
     use_fused_decode: bool = True      # fused flash-decode cache reads
+    queue_trace_samples: int = 4096    # queue-depth ring-buffer capacity
 
 
 def batch_buckets(num_slots: int) -> tuple:
@@ -132,11 +134,16 @@ def batch_buckets(num_slots: int) -> tuple:
     return tuple(out)
 
 
+def _counter_view(key: str):
+    """Legacy integer counter attribute backed by a registry child."""
+    return property(lambda self: int(self._c[key].value))
+
+
 class Engine:
     """Slot-based continuous batching over a fixed-shape decode program."""
 
     def __init__(self, model, params, cfg: EngineConfig = EngineConfig(),
-                 faults=None):
+                 faults=None, registry: Optional[MetricsRegistry] = None):
         mcfg = model.cfg
         if mcfg.family not in ("dense", "moe") or mcfg.frontend:
             raise ValueError(
@@ -193,29 +200,119 @@ class Engine:
         self._steps = np.zeros(s, np.uint32)
         self._results: Dict[int, GenerationResult] = {}
         self._done: List[GenerationResult] = []
+        self.metrics = registry if registry is not None else MetricsRegistry()
+        self._init_metrics()
         self._reset_counters()
         self._prefill, self._chunk, self._decode = self._make_step_fns()
 
+    def _init_metrics(self) -> None:
+        """Register the engine's metric families and bind one child per
+        family under this engine's constant labels. All dispatch and
+        utilization counters live here; the legacy integer attributes
+        (``engine.decode_steps`` …) are read-only views over the children,
+        and ``queue_stats``/``page_stats`` are views over the same state."""
+        m = self.metrics
+        cfg = self.cfg
+        self._mlabels = {"layout": cfg.kv_layout,
+                         "kv": "int8" if cfg.kv_quantized else "dense"}
+        names = tuple(sorted(self._mlabels))
+        self._metric_children: List[Any] = []
+
+        def counter(key: str, help: str):
+            fam = m.counter(f"engine_{key}_total", help, labelnames=names)
+            child = fam.labels(**self._mlabels)
+            self._metric_children.append(child)
+            return child
+
+        self._c = {k: counter(k, h) for k, h in (
+            ("decode_steps", "decode dispatches"),
+            ("active_slot_steps", "slot-steps that carried a live request"),
+            ("prefill_dispatches", "batched-prefill device calls"),
+            ("prefill_admitted", "requests admitted via batched prefill"),
+            ("chunk_dispatches", "chunked-prefill device calls"),
+            ("chunked_admitted", "requests admitted via chunking"),
+            ("prefix_hits", "admissions with a cached prefix"),
+            ("prefix_misses", "admissions without one (paged only)"),
+            ("prefix_hit_tokens", "prompt tokens skipped via prefix reuse"),
+            ("preemptions", "requests spilled under page pressure"),
+            ("resumes", "tickets restored onto a slot"),
+            ("pages_spilled", "pages round-tripped through host memory"),
+            ("rejected", "try_submit load-shed rejections"),
+        )}
+        self._g_queue = m.gauge(
+            "engine_queue_depth", "scheduler backlog, sampled per step",
+            labelnames=names,
+            trace_capacity=cfg.queue_trace_samples).labels(**self._mlabels)
+        self._g_slots = m.gauge(
+            "engine_slots_active", "slots holding a live request",
+            labelnames=names).labels(**self._mlabels)
+        self._g_pages = m.gauge(
+            "engine_pages_in_use", "allocated KV pages (paged layout)",
+            labelnames=names).labels(**self._mlabels)
+        self._g_prefix_pages = m.gauge(
+            "engine_prefix_cached_pages", "pages held by the prefix cache",
+            labelnames=names).labels(**self._mlabels)
+        self._metric_children += [self._g_queue, self._g_slots,
+                                  self._g_pages, self._g_prefix_pages]
+
+        def hist(key: str, help: str):
+            fam = m.histogram(key, help, labelnames=names, unit="seconds")
+            child = fam.labels(**self._mlabels)
+            self._metric_children.append(child)
+            return child
+
+        self._h_queue = hist("request_queue_seconds",
+                             "submit to first admission")
+        self._h_ttft = hist("request_ttft_seconds",
+                            "submit to first generated token")
+        self._h_tpot = hist("request_tpot_seconds",
+                            "mean seconds per generated token after the first")
+        self._h_latency = hist("request_latency_seconds",
+                               "submit to terminal status")
+        # per-status counters bind their children lazily (statuses appear
+        # as the trace produces them); families registered up front
+        m.counter("engine_requests_total", "terminal results by status",
+                  labelnames=names + ("status",))
+        m.counter("engine_tokens_generated_total",
+                  "generated tokens in terminal results by status",
+                  labelnames=names + ("status",))
+        self._status_children: Dict[tuple, Any] = {}
+
+    def _status_counter(self, name: str, status: str):
+        child = self._status_children.get((name, status))
+        if child is None:
+            fam = self.metrics.counter(f"engine_{name}_total")
+            child = fam.labels(status=status, **self._mlabels)
+            self._status_children[(name, status)] = child
+            self._metric_children.append(child)
+        return child
+
     def _reset_counters(self) -> None:
-        self.decode_steps = 0
-        self.active_slot_steps = 0
-        self.prefill_dispatches = 0     # batched-prefill device calls
-        self.prefill_admitted = 0       # requests admitted via those calls
-        self.chunk_dispatches = 0       # chunked-prefill device calls
-        self.chunked_admitted = 0       # requests admitted via chunking
-        self.prefix_hits = 0            # admissions with a cached prefix
-        self.prefix_misses = 0          # admissions without one (paged only)
-        self.prefix_hit_tokens = 0      # prompt tokens skipped via reuse
-        self.preemptions = 0            # requests spilled under pressure
-        self.resumes = 0                # tickets restored onto a slot
-        self.pages_spilled = 0          # pages round-tripped through host
-        self.rejected = 0               # try_submit load-shed rejections
-        self.queue_depth_peak = 0       # scheduler backlog, sampled per step
-        self.queue_depth_sum = 0
-        self.queue_depth_steps = 0
-        self._queue_depth_trace: List[int] = []
+        for child in self._metric_children:
+            child.reset()
         if self.alloc is not None:
             self.alloc.peak_in_use = self.alloc.pages_in_use
+            self.alloc.alloc_calls = 0
+            self.alloc.alloc_failures = 0
+
+    # legacy counter attributes — read-only views over the registry
+    decode_steps = _counter_view("decode_steps")
+    active_slot_steps = _counter_view("active_slot_steps")
+    prefill_dispatches = _counter_view("prefill_dispatches")
+    prefill_admitted = _counter_view("prefill_admitted")
+    chunk_dispatches = _counter_view("chunk_dispatches")
+    chunked_admitted = _counter_view("chunked_admitted")
+    prefix_hits = _counter_view("prefix_hits")
+    prefix_misses = _counter_view("prefix_misses")
+    prefix_hit_tokens = _counter_view("prefix_hit_tokens")
+    preemptions = _counter_view("preemptions")
+    resumes = _counter_view("resumes")
+    pages_spilled = _counter_view("pages_spilled")
+    rejected = _counter_view("rejected")
+
+    @property
+    def queue_depth_peak(self) -> int:
+        return int(self._g_queue.peak)
 
     def set_faults(self, plan) -> None:
         """Attach/replace the :class:`~repro.serving.faults.FaultPlan`
@@ -370,9 +467,12 @@ class Engine:
                 f"request rid={req.rid} rejected: queue at "
                 f"max_queue={self.cfg.max_queue}")
         self.scheduler.submit(req)
-        self._results[req.rid] = GenerationResult(
-            rid=req.rid, prompt_len=req.prompt_len, tokens=[],
-            t_enqueue=self._now())
+        now = self._now()
+        res = GenerationResult(rid=req.rid, prompt_len=req.prompt_len,
+                               tokens=[], t_enqueue=now)
+        if self.metrics.enabled:
+            res.trace = Trace(req.rid, now)
+        self._results[req.rid] = res
 
     def try_submit(self, req: GenerationRequest) -> bool:
         """Load-shedding submit: capacity/validity rejections become a
@@ -387,12 +487,16 @@ class Engine:
             raise
         except (QueueFullError, InvalidRequestError) as e:
             now = self._now()
-            self._done.append(GenerationResult(
+            res = GenerationResult(
                 rid=req.rid, prompt_len=req.prompt_len, tokens=[],
                 t_enqueue=now, t_finish=now,
                 status=RequestStatus.REJECTED.value,
-                finish_reason=RequestStatus.REJECTED.value, error=str(e)))
-            self.rejected += 1
+                finish_reason=RequestStatus.REJECTED.value, error=str(e))
+            if self.metrics.enabled:
+                res.trace = Trace(req.rid, now)
+            self._c["rejected"].inc()
+            self._observe_terminal(res)
+            self._done.append(res)
             return False
 
     def cancel(self, rid: int) -> bool:
@@ -556,12 +660,10 @@ class Engine:
         if self.faults is not None:
             self.faults.tick()
         self._expire_deadlines()
-        q = len(sched.queue)
-        self.queue_depth_peak = max(self.queue_depth_peak, q)
-        self.queue_depth_sum += q
-        self.queue_depth_steps += 1
-        if len(self._queue_depth_trace) < 4096:
-            self._queue_depth_trace.append(q)
+        # ring-buffered backlog sample: peak/mean/samples accumulate in the
+        # gauge child, the trace keeps the most recent queue_trace_samples
+        # values and counts overwrites in queue_stats()["dropped"]
+        self._g_queue.set(len(sched.queue))
         if self._paged:
             self._admit_paged()
         else:
@@ -595,8 +697,8 @@ class Engine:
         out = np.asarray(out_dev)             # (S, 2): token + finite flag
         toks, finite = out[:, 0], out[:, 1]
         now = self._now()
-        self.decode_steps += 1
-        self.active_slot_steps += sched.num_active
+        self._c["decode_steps"].inc()
+        self._c["active_slot_steps"].inc(sched.num_active)
         for slot in list(sched.active_slots()):
             state = sched.slots[slot]
             rid = state.request.rid
@@ -630,6 +732,7 @@ class Engine:
 
     def _run_prefill_batch(self, batch: AdmittedBatch) -> None:
         """One device dispatch for a whole same-bucket admission batch."""
+        t_admit = self._now()
         b, w = len(batch.items), batch.bucket
         bb = next(x for x in self.batch_buckets if b <= x)
         tokens = np.zeros((bb, w), np.int32)
@@ -650,17 +753,18 @@ class Engine:
             jnp.asarray(slots), jnp.asarray(temps), jnp.asarray(topks),
             jnp.asarray(seeds))
         toks = np.asarray(tok_dev)            # B first tokens, one transfer
-        self.prefill_dispatches += 1
-        self.prefill_admitted += b
+        self._c["prefill_dispatches"].inc()
+        self._c["prefill_admitted"].inc(b)
         now = self._now()
         for i, (slot, req) in enumerate(batch.items):
-            self._record_first_token(slot, req, int(toks[i]), now)
+            self._record_first_token(slot, req, int(toks[i]), now, t_admit)
 
     def _run_chunked(self, slot: int, req: GenerationRequest) -> None:
         """Stream a beyond-largest-bucket prompt through the bucket-width
         chunk program against the slot's own cache rows. Only the final
         chunk's sample is real; intermediate device results are never
         synced."""
+        t_admit = self._now()
         w = self.scheduler.buckets[-1]
         p, sp = req.prompt_len, req.sampling
         tok_dev = None
@@ -672,9 +776,10 @@ class Engine:
                 self.params, self.kv, jnp.asarray(chunk), np.int32(start),
                 np.int32(clen), np.int32(slot), np.float32(sp.temperature),
                 np.int32(sp.top_k), np.uint32(sp.seed))
-            self.chunk_dispatches += 1
-        self.chunked_admitted += 1
-        self._record_first_token(slot, req, int(tok_dev), self._now())
+            self._c["chunk_dispatches"].inc()
+        self._c["chunked_admitted"].inc()
+        self._record_first_token(slot, req, int(tok_dev), self._now(),
+                                 t_admit)
 
     # -- paged admission ---------------------------------------------------
     def _set_table_row(self, slot: int, pages: List[int]) -> None:
@@ -744,8 +849,11 @@ class Engine:
                               n_pages=len(pages),
                               payload=payload)
         sched.preempt(slot, ticket)
-        self.preemptions += 1
-        self.pages_spilled += len(pages)
+        self._c["preemptions"].inc()
+        self._c["pages_spilled"].inc(len(pages))
+        res = self._results[state.request.rid]
+        if res.trace is not None:
+            res.trace.stamp("preempt", self._now())
         self.alloc.decref(pages)
         self._slot_pages[slot] = []
         self._set_table_row(slot, [])
@@ -789,7 +897,10 @@ class Engine:
         self._topks[slot] = sp.top_k
         self._seeds[slot] = np.uint32(sp.seed)
         self._steps[slot] = ticket.generated   # sampling's fold_in counter
-        self.resumes += 1
+        self._c["resumes"].inc()
+        res = self._results[ticket.request.rid]
+        if res.trace is not None:
+            res.trace.stamp("resume", self._now())
         return True
 
     def _extend_for_decode(self) -> None:
@@ -856,10 +967,10 @@ class Engine:
                     self.alloc.decref(matched)
                 break
             if mtok:
-                self.prefix_hits += 1
-                self.prefix_hit_tokens += mtok
+                self._c["prefix_hits"].inc()
+                self._c["prefix_hit_tokens"].inc(mtok)
             elif self.prefix is not None:
-                self.prefix_misses += 1
+                self._c["prefix_misses"].inc()
             slot, _ = sched.admit_head()
             pages = matched + fresh
             self._slot_pages[slot] = pages
@@ -898,6 +1009,7 @@ class Engine:
         del pending[:]
 
     def _dispatch_pending(self, pending: List[tuple]) -> None:
+        t_admit = self._now()
         b = len(pending)
         w = max(self.scheduler.bucket_for(r.prompt_len) for _, r in pending)
         bb = next(x for x in self.batch_buckets if b <= x)
@@ -921,11 +1033,11 @@ class Engine:
             jnp.asarray(maps), jnp.asarray(temps), jnp.asarray(topks),
             jnp.asarray(seeds))
         toks = np.asarray(tok_dev)
-        self.prefill_dispatches += 1
-        self.prefill_admitted += b
+        self._c["prefill_dispatches"].inc()
+        self._c["prefill_admitted"].inc(b)
         now = self._now()
         for i, (slot, req) in enumerate(pending):
-            self._record_first_token(slot, req, int(toks[i]), now)
+            self._record_first_token(slot, req, int(toks[i]), now, t_admit)
 
     def _admit_stream(self, slot: int, req: GenerationRequest,
                       start_tok: int) -> None:
@@ -933,6 +1045,7 @@ class Engine:
         program, starting at the prefix-matched offset (0 for a plain
         beyond-largest-bucket prompt). Only the final chunk's sample is
         real; intermediate device results are never synced."""
+        t_admit = self._now()
         w = self.scheduler.buckets[-1]
         p, sp = req.prompt_len, req.sampling
         table_row = jnp.asarray(self._table[slot:slot + 1])
@@ -945,14 +1058,20 @@ class Engine:
                 self.params, self.kv, jnp.asarray(chunk), np.int32(start),
                 np.int32(clen), table_row, np.float32(sp.temperature),
                 np.int32(sp.top_k), np.uint32(sp.seed))
-            self.chunk_dispatches += 1
-        self.chunked_admitted += 1
-        self._record_first_token(slot, req, int(tok_dev), self._now())
+            self._c["chunk_dispatches"].inc()
+        self._c["chunked_admitted"].inc()
+        self._record_first_token(slot, req, int(tok_dev), self._now(),
+                                 t_admit)
 
     def _record_first_token(self, slot: int, req: GenerationRequest,
-                            tok: int, now: float) -> None:
+                            tok: int, now: float,
+                            t_admit: Optional[float] = None) -> None:
         res = self._results[req.rid]
+        res.t_admit = now if t_admit is None else t_admit
         res.t_first_token = now
+        if res.trace is not None:
+            res.trace.stamp("admitted", res.t_admit)
+            res.trace.stamp("first_token", now)
         res.tokens.append(tok)
         state = self.scheduler.slots[slot]
         state.generated = 1
@@ -974,6 +1093,7 @@ class Engine:
         res.finish_reason = (RequestStatus.EOS.value
                              if res.tokens and res.tokens[-1] == req.eos_id
                              else RequestStatus.LENGTH.value)
+        self._observe_terminal(res)
         self._done.append(res)
         self._release_slot(slot)
 
@@ -989,6 +1109,7 @@ class Engine:
         res.status = status
         res.finish_reason = status
         res.error = msg
+        self._observe_terminal(res)
         self._done.append(res)
         self._release_slot(slot)
 
@@ -1013,7 +1134,30 @@ class Engine:
         res.status = status
         res.finish_reason = status
         res.error = msg
+        self._observe_terminal(res)
         self._done.append(res)
+
+    def _observe_terminal(self, res: GenerationResult) -> None:
+        """Terminal lifecycle observations: close the trace, count the
+        result by status, feed the latency histograms. Pure host dict/float
+        work — no device interaction, safe inside the step loop."""
+        if res.trace is not None:
+            res.trace.finish(res.status, res.t_finish)
+        self._status_counter("requests", res.status).inc()
+        if res.tokens:
+            self._status_counter("tokens_generated",
+                                 res.status).inc(len(res.tokens))
+        if not self.metrics.enabled:
+            return
+        if res.status != RequestStatus.REJECTED.value:
+            # rejected requests never entered the queue; everyone else gets
+            # a queue-time sample (whole lifetime when never admitted)
+            self._h_queue.observe(res.queue_time)
+        if res.t_first_token > 0.0:
+            self._h_ttft.observe(res.ttft)
+            if len(res.tokens) > 1:
+                self._h_tpot.observe(res.tpot)
+        self._h_latency.observe(res.latency)
 
     def _park(self, slot: int) -> None:
         # park the freed slot: greedy token 0 at position 0, overwritten by
@@ -1026,9 +1170,12 @@ class Engine:
         self._seeds[slot] = 0
         self._steps[slot] = 0
 
-    def run(self, max_steps: int = 1_000_000) -> List[GenerationResult]:
+    def run(self, max_steps: int = 1_000_000,
+            step_hook=None) -> List[GenerationResult]:
         """Drive until every submitted request reaches a terminal status;
-        returns results in completion order.
+        returns results in completion order. ``step_hook(engine)``, when
+        given, runs after every step (periodic stats printing, profiler
+        windows) — host-side only, it must not submit or cancel.
 
         Raises :class:`EngineStalledError` — carrying the stuck requests'
         rids and where they are stuck — in two cases: ``max_steps``
@@ -1045,6 +1192,8 @@ class Engine:
             before = (self.decode_steps, self.prefill_admitted,
                       self.chunked_admitted, self.resumes, len(self._done))
             self.step()
+            if step_hook is not None:
+                step_hook(self)
             if (self.decode_steps, self.prefill_admitted,
                     self.chunked_admitted, self.resumes,
                     len(self._done)) == before:
@@ -1167,8 +1316,14 @@ class Engine:
             "page_size": self.cfg.page_size,
             "pages_in_use": self.alloc.pages_in_use,
             "peak_pages_in_use": self.alloc.peak_in_use,
+            "alloc_calls": self.alloc.alloc_calls,
+            "alloc_failures": self.alloc.alloc_failures,
             "prefix_cached_pages": (self.prefix.cached_pages
                                     if self.prefix is not None else 0),
+            "prefix_inserted_pages": (self.prefix.inserted_pages
+                                      if self.prefix is not None else 0),
+            "prefix_evicted_pages": (self.prefix.evicted_pages
+                                     if self.prefix is not None else 0),
             "prefix_hits": self.prefix_hits,
             "prefix_misses": self.prefix_misses,
             "prefix_hit_tokens": self.prefix_hit_tokens,
@@ -1184,16 +1339,32 @@ class Engine:
                                          * self.cfg.num_slots)
 
     def queue_stats(self) -> Dict[str, Any]:
-        """Backlog observability: queue depth sampled at each step
-        boundary (peak / mean / per-step trace, trace capped at 4096
-        samples) plus the ``try_submit`` load-shed count. Counters reset
-        with :meth:`warmup`."""
-        steps = max(self.queue_depth_steps, 1)
-        return {"peak": self.queue_depth_peak,
-                "mean": self.queue_depth_sum / steps,
-                "samples": self.queue_depth_steps,
+        """Backlog observability — a view over the registry's queue-depth
+        gauge: queue depth sampled at each step boundary (peak / mean over
+        ALL samples; the per-step trace is a ring of the most recent
+        ``cfg.queue_trace_samples`` values with overwrites counted in
+        ``dropped``) plus the ``try_submit`` load-shed count. Counters
+        reset with :meth:`warmup`."""
+        g = self._g_queue
+        return {"peak": int(g.peak),
+                "mean": g.mean,
+                "samples": g.samples,
                 "rejected": self.rejected,
-                "trace": list(self._queue_depth_trace)}
+                "trace": [int(v) for v in g.trace_values()],
+                "dropped": g.trace_dropped}
+
+    def metrics_snapshot(self) -> dict:
+        """Full registry snapshot (counters/gauges/histograms) with the
+        point-in-time state gauges refreshed. The canonical export for
+        benches and ``serve.py --metrics-json`` — everything
+        ``page_stats``/``queue_stats``/the legacy counter attributes show
+        is derivable from it."""
+        self._g_slots.set_value(self.scheduler.num_active)
+        if self._paged:
+            self._g_pages.set_value(self.alloc.pages_in_use)
+            if self.prefix is not None:
+                self._g_prefix_pages.set_value(self.prefix.cached_pages)
+        return self.metrics.snapshot()
 
 
 __all__ = ["Engine", "EngineConfig", "GenerationRequest", "GenerationResult",

@@ -63,6 +63,8 @@ class PageAllocator:
         self._free: deque = deque(range(num_pages))
         self._refs: Dict[int, int] = {}     # page -> refcount (live pages)
         self.peak_in_use = 0
+        self.alloc_calls = 0                # alloc() attempts (incl. failed)
+        self.alloc_failures = 0             # pool-dry / injected failures
 
     # -- queries -----------------------------------------------------------
     @property
@@ -90,9 +92,12 @@ class PageAllocator:
     def alloc(self, n: int) -> Optional[List[int]]:
         """Pop n pages (refcount 1 each), or None if the pool is short —
         the caller escalates (evict prefix entries, preempt a request)."""
+        self.alloc_calls += 1
         if self.faults is not None and self.faults.fail_alloc():
+            self.alloc_failures += 1
             return None                     # injected: pretend pool-dry
         if n > len(self._free):
+            self.alloc_failures += 1
             return None
         pages = [self._free.popleft() for _ in range(n)]
         for p in pages:

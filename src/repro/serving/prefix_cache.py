@@ -49,6 +49,7 @@ class PrefixCache:
         self.alloc = allocator
         self._entries: "OrderedDict[bytes, int]" = OrderedDict()  # hash->page
         self.evicted_pages = 0
+        self.inserted_pages = 0
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -110,6 +111,7 @@ class PrefixCache:
             self._entries[h] = pages[i]
             self.alloc.incref([pages[i]])
             added += 1
+        self.inserted_pages += added
         return added
 
     # -- eviction ----------------------------------------------------------

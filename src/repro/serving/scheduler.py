@@ -112,11 +112,13 @@ class GenerationResult:
     prompt_len: int
     tokens: List[int]
     t_enqueue: float = 0.0
+    t_admit: float = 0.0               # first admission onto a slot (0: never)
     t_first_token: float = 0.0
     t_finish: float = 0.0
     status: str = RequestStatus.OK.value
     finish_reason: str = ""            # length|eos|cancelled|deadline|...
     error: str = ""                    # detail for error/rejected statuses
+    trace: Optional[object] = None     # repro.obs.Trace (None: metrics off)
 
     @property
     def ok(self) -> bool:
@@ -129,6 +131,21 @@ class GenerationResult:
     @property
     def ttft(self) -> float:
         return self.t_first_token - self.t_enqueue
+
+    @property
+    def queue_time(self) -> float:
+        """Seconds from submit to first admission (whole lifetime when the
+        request reached a terminal status without ever being admitted)."""
+        return ((self.t_admit if self.t_admit > 0.0 else self.t_finish)
+                - self.t_enqueue)
+
+    @property
+    def tpot(self) -> float:
+        """Mean seconds per generated token after the first (0.0 with
+        fewer than two tokens)."""
+        if len(self.tokens) < 2 or self.t_first_token <= 0.0:
+            return 0.0
+        return (self.t_finish - self.t_first_token) / (len(self.tokens) - 1)
 
 
 @dataclasses.dataclass

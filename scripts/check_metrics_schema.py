@@ -7,6 +7,7 @@ dashboards and downstream tooling can rely on it across PRs.
 
     python scripts/check_metrics_schema.py SNAP.json \
         [--schema scripts/metrics_schema.json] \
+        [--check-families] \
         [--require counters:engine_requests_total ...] \
         [--prom SNAP.json.prom --prom-require engine_requests_total ...]
 
@@ -17,10 +18,22 @@ top of the shape check it enforces histogram semantics the schema language
 can't express: ``len(counts) == len(le) + 1`` (overflow slot) and
 ``count == sum(counts)``.  ``--require KIND:NAME`` asserts a metric family
 is present; ``--prom-require NAME`` greps the text exposition for a family.
+
+``--check-families`` validates every family NAME in the snapshot against
+the schema's ``families`` contract — the same list the ``metrics-contract``
+lint (``repro.lint``) keeps bidirectionally in sync with the code, shared
+via ``repro.lint.contracts.load_schema_families`` so the runtime and
+static checkers can never drift apart.
 """
 import argparse
 import json
+import os
 import sys
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.lint.contracts import load_schema_families  # noqa: E402
 
 _TYPES = {
     "object": dict,
@@ -86,6 +99,9 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("snapshot", help="metrics snapshot JSON to validate")
     ap.add_argument("--schema", default="scripts/metrics_schema.json")
+    ap.add_argument("--check-families", action="store_true",
+                    help="every family name in the snapshot must be "
+                         "declared in the schema's 'families' contract")
     ap.add_argument("--require", action="append", default=[],
                     metavar="KIND:NAME",
                     help="assert a family exists, e.g. "
@@ -103,6 +119,16 @@ def main():
 
     errors = list(validate(snap, schema))
     errors += list(histogram_semantics(snap))
+    if args.check_families:
+        declared = load_schema_families(args.schema)
+        for kind in ("counters", "gauges", "histograms"):
+            for name in snap.get(kind, {}):
+                if name not in declared.get(kind, []):
+                    errors.append(
+                        f"snapshot family {kind}:{name} is not declared in "
+                        f"{args.schema} families.{kind} — add it there (the "
+                        "metrics-contract lint keeps that list in sync "
+                        "with the code)")
     for req in args.require:
         kind, _, name = req.partition(":")
         if name not in snap.get(kind, {}):

@@ -1,0 +1,12 @@
+"""repro.lint — JAX/Pallas-aware static analysis for this repo.
+
+Six rule families over ``src/repro`` (host-sync, recompile-hazard,
+tracer-leak, pallas-tiling, dtype-drift, register/metrics contracts),
+a content-fingerprinted baseline, and ``scripts/run_lint.py`` as the CLI.
+See ``docs/static-analysis.md`` for the catalog and workflow.
+"""
+from .core import (Finding, LintConfig, available, load_baseline,
+                   partition, register, run_lint, save_baseline)
+
+__all__ = ["Finding", "LintConfig", "available", "load_baseline",
+           "partition", "register", "run_lint", "save_baseline"]

@@ -1,0 +1,340 @@
+"""Shared AST machinery for the ``repro.lint`` analyzer.
+
+Everything rule modules need to reason about a source file without
+re-walking it from scratch:
+
+* a parsed module with parent links and per-function qualified names;
+* an import table canonicalizing aliases (``np`` → ``numpy``, ``pl`` →
+  ``jax.experimental.pallas``) so rules match on canonical dotted names;
+* detection of *traced* functions — defs wrapped by ``jax.jit`` (call or
+  decorator form), ``pmap``/``vmap``/``scan``/``checkpoint`` bodies, and
+  Pallas kernel callables handed to ``pl.pallas_call``;
+* an intra-module call graph (``self.m()`` → ``Class.m``, bare ``f()`` →
+  module function) plus reachability, which is how the host-sync rule
+  expands the declared hot-path roots into the full hot set;
+* ``# lint: ...`` control comments: ``allow[rule]`` suppressions and
+  ``hotpath`` markers (see docs/static-analysis.md).
+
+All of it is plain ``ast`` — no third-party dependencies, by design.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+# ``# lint: allow[host-sync, dtype-drift] reason`` / ``# lint: hotpath``
+_LINT_COMMENT = re.compile(
+    r"#\s*lint:\s*(?P<verb>allow|hotpath)(?:\[(?P<rules>[^\]]*)\])?")
+
+# Wrappers whose callee body runs under a jax trace. The first group
+# compiles a program (a host sync inside is a bug); the second stages into
+# an enclosing trace (a tracer leak inside is a bug either way).
+JIT_WRAPPERS = ("jax.jit", "jax.pmap", "jax.experimental.pallas.pallas_call")
+TRACE_WRAPPERS = JIT_WRAPPERS + (
+    "jax.vmap", "jax.checkpoint", "jax.remat", "jax.grad", "jax.value_and_grad",
+    "jax.lax.scan", "jax.lax.while_loop", "jax.lax.fori_loop",
+    "jax.lax.cond", "jax.lax.switch", "jax.experimental.shard_map.shard_map",
+)
+
+
+@dataclasses.dataclass
+class FunctionInfo:
+    node: ast.AST                   # FunctionDef | AsyncFunctionDef | Lambda
+    name: str
+    qualname: str                   # "Engine.step", "_make_step_fns.decode_fn"
+    cls: Optional[str]              # enclosing class name, if a method
+    jitted: bool = False            # wrapped by a compiling wrapper
+    traced: bool = False            # body runs under some jax trace
+    hotpath_marker: bool = False    # ``# lint: hotpath`` on the def line
+    calls: Set[str] = dataclasses.field(default_factory=set)
+    # params declared static in the jit wrapper — Python values under the
+    # trace, so branching on them is fine
+    static_params: Set[str] = dataclasses.field(default_factory=set)
+
+
+class Module:
+    """One parsed source file plus the derived tables rules consume."""
+
+    def __init__(self, path: str, relpath: str, text: str):
+        self.path = path
+        self.relpath = relpath
+        self.text = text
+        self.lines = text.splitlines()
+        self.tree = ast.parse(text, filename=path)
+        self._parents: Dict[ast.AST, ast.AST] = {}
+        for parent in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(parent):
+                self._parents[child] = parent
+        self.imports = _import_table(self.tree)
+        self.allow: Dict[int, Set[str]] = {}     # line → suppressed rules
+        self.hotpath_lines: Set[int] = set()
+        self._scan_comments()
+        self.functions: List[FunctionInfo] = []
+        self._fn_of_node: Dict[ast.AST, FunctionInfo] = {}
+        self._collect_functions()
+        self._mark_traced()
+        self._build_call_graph()
+
+    # -- comments ----------------------------------------------------------
+    def _scan_comments(self) -> None:
+        for i, line in enumerate(self.lines, start=1):
+            m = _LINT_COMMENT.search(line)
+            if not m:
+                continue
+            if m.group("verb") == "hotpath":
+                self.hotpath_lines.add(i)
+                continue
+            rules = m.group("rules")
+            names = ({r.strip() for r in rules.split(",") if r.strip()}
+                     if rules else {"*"})
+            self.allow.setdefault(i, set()).update(names)
+
+    def suppressed(self, line: int, rule: str) -> bool:
+        """``# lint: allow[rule]`` on the finding line or the line above."""
+        for ln in (line, line - 1):
+            rules = self.allow.get(ln)
+            if rules and ("*" in rules or rule in rules):
+                return True
+        return False
+
+    # -- names -------------------------------------------------------------
+    def dotted(self, node: ast.AST) -> Optional[str]:
+        """Canonical dotted name of an expression (``np.asarray`` →
+        ``numpy.asarray``; ``self.foo`` stays ``self.foo``); None when the
+        expression is not a plain name chain."""
+        parts: List[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        parts.append(node.id)
+        parts.reverse()
+        head = self.imports.get(parts[0], parts[0])
+        return ".".join([head] + parts[1:])
+
+    def parent(self, node: ast.AST) -> Optional[ast.AST]:
+        return self._parents.get(node)
+
+    def ancestors(self, node: ast.AST) -> Iterable[ast.AST]:
+        cur = self._parents.get(node)
+        while cur is not None:
+            yield cur
+            cur = self._parents.get(cur)
+
+    def enclosing_function(self, node: ast.AST) -> Optional[FunctionInfo]:
+        for anc in self.ancestors(node):
+            fn = self._fn_of_node.get(anc)
+            if fn is not None:
+                return fn
+        return None
+
+    # -- functions ---------------------------------------------------------
+    def _collect_functions(self) -> None:
+        def visit(node: ast.AST, stack: Tuple[str, ...], cls: Optional[str]):
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    qual = ".".join(stack + (child.name,))
+                    info = FunctionInfo(
+                        node=child, name=child.name, qualname=qual, cls=cls,
+                        hotpath_marker=any(
+                            ln in self.hotpath_lines
+                            for ln in range(child.lineno,
+                                            child.body[0].lineno + 1)))
+                    self.functions.append(info)
+                    self._fn_of_node[child] = info
+                    visit(child, stack + (child.name,), cls)
+                elif isinstance(child, ast.ClassDef):
+                    visit(child, stack + (child.name,), child.name)
+                else:
+                    visit(child, stack, cls)
+        visit(self.tree, (), None)
+
+    def by_name(self, name: str) -> List[FunctionInfo]:
+        return [f for f in self.functions if f.name == name]
+
+    def by_qualname(self, qualname: str) -> List[FunctionInfo]:
+        return [f for f in self.functions if f.qualname == qualname]
+
+    # -- traced / jitted detection -----------------------------------------
+    def _wrapper_kind(self, call: ast.Call) -> Optional[str]:
+        """'jit' | 'trace' when ``call`` is a known jax wrapper (including
+        ``functools.partial(jax.jit, ...)``)."""
+        name = self.dotted(call.func)
+        if name == "functools.partial" and call.args:
+            name = self.dotted(call.args[0])
+        if name is None:
+            return None
+        short = name.rsplit(".", 1)[-1]
+        for full in JIT_WRAPPERS:
+            if name == full or short == full.rsplit(".", 1)[-1]:
+                return "jit"
+        for full in TRACE_WRAPPERS:
+            if name == full or short == full.rsplit(".", 1)[-1]:
+                return "trace"
+        return None
+
+    def _static_names(self, call: ast.Call) -> Set[str]:
+        """static_argnames string literals declared on a jit wrapper call
+        (direct or via functools.partial)."""
+        out: Set[str] = set()
+        for kw in call.keywords:
+            if kw.arg != "static_argnames":
+                continue
+            elts = (list(kw.value.elts)
+                    if isinstance(kw.value, (ast.Tuple, ast.List))
+                    else [kw.value])
+            for e in elts:
+                if isinstance(e, ast.Constant) and isinstance(e.value, str):
+                    out.add(e.value)
+        return out
+
+    def _mark_traced(self) -> None:
+        wrapped: Dict[str, str] = {}      # function name → 'jit' | 'trace'
+        statics: Dict[str, Set[str]] = {}
+
+        def note(name: str, kind: str, static: Set[str]) -> None:
+            if kind == "jit" or wrapped.get(name) != "jit":
+                wrapped[name] = kind
+            statics.setdefault(name, set()).update(static)
+
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Call):
+                kind = self._wrapper_kind(node)
+                if kind is not None:
+                    for arg in node.args:
+                        if isinstance(arg, ast.Name):
+                            note(arg.id, kind, self._static_names(node))
+        for fn in self.functions:
+            for deco in getattr(fn.node, "decorator_list", ()):
+                kind = None
+                static: Set[str] = set()
+                if isinstance(deco, ast.Call):
+                    kind = self._wrapper_kind(deco)
+                    static = self._static_names(deco)
+                else:
+                    name = self.dotted(deco)
+                    if name is not None:
+                        probe = ast.Call(func=deco, args=[], keywords=[])
+                        kind = self._wrapper_kind(probe)
+                if kind is not None:
+                    note(fn.name, kind, static)
+        for fn in self.functions:
+            kind = wrapped.get(fn.name)
+            if kind is not None:
+                fn.traced = True
+                fn.jitted = kind == "jit"
+                fn.static_params |= statics.get(fn.name, set())
+        # nested defs inside a traced body are traced too
+        changed = True
+        while changed:
+            changed = False
+            for fn in self.functions:
+                if fn.traced:
+                    continue
+                outer = self.enclosing_function(fn.node)
+                if outer is not None and outer.traced:
+                    fn.traced = True
+                    fn.jitted = outer.jitted
+                    changed = True
+
+    # -- call graph --------------------------------------------------------
+    def _build_call_graph(self) -> None:
+        for fn in self.functions:
+            for node in ast.walk(fn.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                if self.enclosing_function(node) is not fn and not any(
+                        self._fn_of_node.get(a) is fn
+                        for a in self.ancestors(node)):
+                    continue
+                name = self.dotted(node.func)
+                if name is None:
+                    continue
+                if name.startswith("self.") and fn.cls is not None:
+                    fn.calls.add(f"{fn.cls}.{name[len('self.'):]}")
+                elif "." not in name:
+                    fn.calls.add(name)
+
+    def reachable(self, roots: Iterable[str]) -> Set[str]:
+        """Qualnames reachable from ``roots`` over the intra-module call
+        graph. Roots may be ``Class.method`` or bare function names; bare
+        callee names resolve to any same-named function in the module."""
+        by_key: Dict[str, List[FunctionInfo]] = {}
+        for fn in self.functions:
+            by_key.setdefault(fn.name, []).append(fn)
+            key = f"{fn.cls}.{fn.name}" if fn.cls else fn.qualname
+            by_key.setdefault(key, []).append(fn)
+            by_key.setdefault(fn.qualname, []).append(fn)
+        seen: Set[str] = set()
+        stack = [r for r in roots if r in by_key]
+        while stack:
+            key = stack.pop()
+            for fn in by_key.get(key, ()):
+                if fn.qualname in seen:
+                    continue
+                seen.add(fn.qualname)
+                stack.extend(c for c in fn.calls if c in by_key)
+        return seen
+
+
+def _import_table(tree: ast.Module) -> Dict[str, str]:
+    table: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                table[alias.asname or alias.name.split(".")[0]] = (
+                    alias.name if alias.asname else alias.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom):
+            for alias in node.names:
+                table[alias.asname or alias.name] = (
+                    f"{node.module}.{alias.name}" if node.module
+                    else alias.name)
+    return table
+
+
+def const_int(node: ast.AST) -> Optional[int]:
+    """The int value of a constant expression node, else None."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, int) \
+            and not isinstance(node.value, bool):
+        return node.value
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        inner = const_int(node.operand)
+        return -inner if inner is not None else None
+    return None
+
+
+def literal_tuple(node: ast.AST) -> Optional[List[ast.AST]]:
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return list(node.elts)
+    return None
+
+
+def call_kwarg(call: ast.Call, name: str) -> Optional[ast.AST]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def is_shapelike(node: ast.AST) -> bool:
+    """True for expressions that are static under a jax trace even when
+    their base value is traced: ``x.shape``, ``x.ndim``, ``x.dtype``,
+    ``len(x)``, ``x.shape[i]``."""
+    if isinstance(node, ast.Attribute) and node.attr in (
+            "shape", "ndim", "dtype", "size"):
+        return True
+    if isinstance(node, ast.Subscript):
+        return is_shapelike(node.value)
+    if isinstance(node, ast.Call):
+        name = None
+        if isinstance(node.func, ast.Name):
+            name = node.func.id
+        return name in ("len", "getattr")
+    return False
+
+
+__all__ = ["Module", "FunctionInfo", "const_int", "literal_tuple",
+           "call_kwarg", "is_shapelike", "JIT_WRAPPERS", "TRACE_WRAPPERS"]

@@ -1,0 +1,9 @@
+"""Built-in lint rules. Importing this package registers every rule —
+the ``_load_builtins()`` hook in ``repro.lint.core`` imports it lazily,
+mirroring how ``repro.core.registry`` loads its compression methods."""
+from . import contracts  # noqa: F401
+from . import dtype_drift  # noqa: F401
+from . import host_sync  # noqa: F401
+from . import pallas_tiling  # noqa: F401
+from . import recompile  # noqa: F401
+from . import tracer_leak  # noqa: F401

@@ -1,0 +1,139 @@
+"""Contract lints: registry adapters and the metric-name schema.
+
+``register-contract`` (module scope): every function decorated with
+``repro.core.registry.register`` must return a ``CompressResult`` on every
+return path — that is the whole integration contract (`docs/api.md`), and
+a stray bare ``theta`` return only fails much later inside
+``compress_model``'s artifact handling. One level of local-helper
+indirection is resolved (``awp.py``'s ``_prune_result``).
+
+``metrics-contract`` (project scope): every metric family registered in
+``src/repro`` must be listed in ``scripts/metrics_schema.json``'s
+``families`` key and vice versa, via the shared extractor in
+``repro.lint.contracts`` (also used by ``check_metrics_schema.py``).
+"""
+from __future__ import annotations
+
+import ast
+import os
+from fnmatch import fnmatch
+from typing import Optional
+
+from ..contracts import KINDS, extract_metric_uses, load_schema_families
+from ..core import ModuleContext, ProjectContext, register
+
+
+def _is_registry_register(mod, deco: ast.AST) -> bool:
+    if not isinstance(deco, ast.Call):
+        return False
+    name = mod.dotted(deco.func)
+    if name is None:
+        return False
+    parts = name.split(".")
+    return parts[-1] == "register" and len(parts) >= 2 and \
+        parts[-2].lstrip("_").endswith("registry")
+
+
+def _returns_compress_result(mod, fn_node: ast.AST, depth: int = 0
+                             ) -> Optional[ast.Return]:
+    """The first return statement that does NOT resolve to a
+    CompressResult construction, or None when all paths comply."""
+
+    def resolves(expr: ast.AST) -> bool:
+        if isinstance(expr, ast.Call):
+            name = mod.dotted(expr.func)
+            if name is not None and name.rsplit(".", 1)[-1] == \
+                    "CompressResult":
+                return True
+            # one level of local helper indirection
+            if name is not None and "." not in name and depth < 2:
+                for helper in mod.by_name(name):
+                    if helper.cls is None and _returns_compress_result(
+                            mod, helper.node, depth + 1) is None:
+                        return True
+            return False
+        if isinstance(expr, ast.Name):
+            # name assigned from a CompressResult call earlier in the body
+            for n in ast.walk(fn_node):
+                if isinstance(n, ast.Assign) and any(
+                        isinstance(t, ast.Name) and t.id == expr.id
+                        for t in n.targets) and resolves(n.value):
+                    return True
+            return False
+        if isinstance(expr, ast.IfExp):
+            return resolves(expr.body) and resolves(expr.orelse)
+        return False
+
+    fn = mod.enclosing_function(fn_node)
+    for node in ast.walk(fn_node):
+        if not isinstance(node, ast.Return) or node.value is None:
+            continue
+        owner = mod.enclosing_function(node)
+        if owner is not None and owner.node is not fn_node:
+            continue
+        if not resolves(node.value):
+            return node
+    return None
+
+
+@register("register-contract", severity="error", help=(
+    "@registry.register adapters must return CompressResult on every "
+    "path; anything else breaks compress_model's artifact handling."))
+def check_register_contract(ctx: ModuleContext) -> None:
+    mod = ctx.module
+    for fn in mod.functions:
+        decos = getattr(fn.node, "decorator_list", ())
+        if not any(_is_registry_register(mod, d) for d in decos):
+            continue
+        bad = _returns_compress_result(mod, fn.node)
+        if bad is not None:
+            ctx.report(bad, (
+                f"@register adapter {fn.name!r} has a return path that is "
+                "not a CompressResult — wrap it: "
+                "registry.CompressResult(theta=...)"), symbol=fn.qualname)
+
+
+@register("metrics-contract", severity="error", scope="project", help=(
+    "Metric family names in code and scripts/metrics_schema.json "
+    "'families' must match bidirectionally."))
+def check_metrics_contract(ctx: ProjectContext) -> None:
+    schema_rel = ctx.config.metrics_schema
+    schema_path = os.path.join(ctx.root, schema_rel)
+    if not os.path.exists(schema_path):
+        ctx.report(schema_rel, 1, f"metrics schema not found: {schema_rel}")
+        return
+    try:
+        families = load_schema_families(schema_path)
+    except ValueError as exc:
+        ctx.report(schema_rel, 1, str(exc))
+        return
+
+    uses = []
+    for mod in ctx.modules:
+        uses.extend(extract_metric_uses(mod))
+
+    # code → schema
+    for use in uses:
+        names = families.get(use.kind, [])
+        if use.exact:
+            ok = use.name in names
+        else:
+            ok = any(fnmatch(n, use.name) for n in names)
+        if not ok:
+            what = "name" if use.exact else "pattern"
+            ctx.report(use.path, use.line, (
+                f"metric {what} {use.name!r} ({use.kind}) is not listed "
+                f"in {schema_rel} families.{use.kind}"))
+
+    # schema → code
+    for kind in KINDS:
+        declared = families.get(kind, [])
+        for name in declared:
+            hit = any(
+                u.kind == kind and (
+                    u.name == name if u.exact else fnmatch(name, u.name))
+                for u in uses)
+            if not hit:
+                ctx.report(schema_rel, 1, (
+                    f"families.{kind} lists {name!r} but no code in the "
+                    "scanned tree registers it"))

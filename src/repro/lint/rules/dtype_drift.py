@@ -1,0 +1,81 @@
+"""dtype-drift: silent bf16/f16 → f32 promotion in low-precision paths.
+
+JAX's promotion rules make Python scalars *weak*-typed (``x * 2.0`` keeps
+``x``'s bf16), but ``np.float32(2.0)`` and numpy array operands are
+strong: mixing one into bf16 arithmetic silently promotes the whole
+expression to f32 — doubling HBM traffic in exactly the layers the paper's
+quantized serving path exists to shrink. ``float64`` anywhere is worse:
+jax silently truncates it unless x64 is enabled, and enabling x64 doubles
+every buffer.
+
+Checked only in the configured dtype-sensitive files (layers, KV cache,
+kernels) to keep host-side tooling free to use numpy scalars.
+"""
+from __future__ import annotations
+
+import ast
+from fnmatch import fnmatch
+
+from ..core import ModuleContext, register
+
+_NP_STRONG_SCALARS = (
+    "numpy.float32", "numpy.float64", "numpy.float16",
+    "numpy.int64", "numpy.int32", "numpy.int16", "numpy.int8",
+    "numpy.uint8", "numpy.uint32")
+_NP_UFUNCS = (
+    "numpy.exp", "numpy.log", "numpy.sqrt", "numpy.tanh", "numpy.maximum",
+    "numpy.minimum", "numpy.where", "numpy.sum", "numpy.mean", "numpy.abs",
+    "numpy.clip", "numpy.power", "numpy.square", "numpy.rsqrt")
+_F64_NAMES = ("jax.numpy.float64", "numpy.float64")
+
+
+@register("dtype-drift", severity="error", help=(
+    "np strong-typed scalars / numpy ufuncs in bf16-sensitive code promote "
+    "the whole expression to f32; float64 dtypes are truncated or double "
+    "memory. Use Python scalars (weak-typed) or jnp with an explicit "
+    "dtype."))
+def check_dtype_drift(ctx: ModuleContext) -> None:
+    mod = ctx.module
+    sensitive = any(
+        fnmatch(mod.relpath, g) for g in ctx.config.dtype_sensitive)
+
+    for node in ast.walk(mod.tree):
+        # float64 dtype literals on *jax* calls — host-side numpy f64 is
+        # legitimate (GPTQ/SparseGPT Hessian math follows the official
+        # f64 implementations), but jax truncates it silently
+        if isinstance(node, ast.keyword) and node.arg == "dtype":
+            name = mod.dotted(node.value)
+            owner = mod.parent(node)
+            owner_name = mod.dotted(owner.func) if isinstance(
+                owner, ast.Call) else None
+            on_jax = owner_name is not None and owner_name.startswith("jax.")
+            if name in _F64_NAMES and (on_jax or name == _F64_NAMES[0]):
+                ctx.report(node.value, (
+                    "dtype=float64 on a jax call: truncated to f32 unless "
+                    "x64 is enabled, and x64 doubles every buffer — use "
+                    "an explicit f32/bf16 dtype"))
+        if not sensitive:
+            continue
+        if isinstance(node, ast.Call):
+            name = mod.dotted(node.func)
+            if name in _NP_STRONG_SCALARS:
+                # only flag when the scalar feeds arithmetic (a bare
+                # np.int32(...) used as an index/host value is fine)
+                parent = mod.parent(node)
+                if isinstance(parent, (ast.BinOp, ast.Compare, ast.Call)) \
+                        and not (isinstance(parent, ast.Call)
+                                 and parent.func is node):
+                    short = name.rsplit(".", 1)[-1]
+                    ctx.report(node, (
+                        f"np.{short}(...) is strong-typed: mixing it into "
+                        "bf16 arithmetic promotes the whole expression "
+                        "(use a Python scalar — weak-typed — or "
+                        f"jnp.{short})"))
+            elif name in _NP_UFUNCS:
+                fn = mod.enclosing_function(node)
+                if fn is not None and fn.traced:
+                    short = name.rsplit(".", 1)[-1]
+                    ctx.report(node, (
+                        f"np.{short} on a traced value materializes a "
+                        "strong-typed f32/f64 numpy array inside the "
+                        f"trace — use jnp.{short}"), severity="warning")

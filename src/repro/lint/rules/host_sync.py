@@ -1,0 +1,200 @@
+"""host-sync: device→host transfers on hot paths and inside jitted bodies.
+
+The serving contract is ONE host transfer per decode step (the packed
+int32 token block); anything else — ``.item()``, ``np.asarray`` on a
+device value, ``int()`` on a device scalar, an ``if`` on an array —
+serializes the dispatch pipeline. Inside a jitted body the same calls are
+worse: they either fail under tracing or silently force a constant.
+
+Scope: functions that are (a) jitted/traced, (b) reachable from the
+configured hot-path roots (``Engine.step`` + markers) over the
+intra-module call graph, or (c) carry a ``# lint: hotpath`` marker.
+
+Dataflow: a name is *device-tainted* when assigned from a ``jnp.*`` /
+``jax.*`` call, from a configured device producer (``self._decode(...)``),
+or from arithmetic over tainted names; ``np.asarray``/``jax.device_get``
+launder the result back to host. ``x.shape``/``len(x)`` never taint —
+they are static under tracing.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Set
+
+from ..astutil import is_shapelike
+from ..core import ModuleContext, register
+
+_ALWAYS_SYNC_ATTRS = ("item", "block_until_ready", "tolist")
+_SYNC_CALLS = ("jax.device_get",)
+_LAUNDER_CALLS = ("numpy.asarray", "numpy.array", "jax.device_get")
+_CAST_BUILTINS = ("float", "int", "bool")
+_DEVICE_PREFIXES = ("jax.numpy.", "jax.lax.", "jax.nn.", "jax.random.")
+_DEVICE_CALLS = ("jax.device_put", "jax.block_until_ready")
+
+
+def _tainted_names(ctx: ModuleContext, fn_node: ast.AST,
+                   producers: Set[str], params_tainted: bool) -> Set[str]:
+    """One forward pass per function body: names holding device values."""
+    mod = ctx.module
+    tainted: Set[str] = set()
+    fn_info = mod.enclosing_function(fn_node.body[0]) if fn_node.body \
+        else None
+    static = fn_info.static_params if fn_info is not None else set()
+    if params_tainted:
+        args = fn_node.args
+        for a in (list(args.posonlyargs) + list(args.args)
+                  + list(args.kwonlyargs)):
+            if a.arg != "self" and a.arg not in static:
+                tainted.add(a.arg)
+
+    def expr_tainted(node: ast.AST) -> bool:
+        if is_shapelike(node):
+            return False
+        if isinstance(node, ast.Name):
+            return node.id in tainted
+        if isinstance(node, ast.Attribute):
+            name = mod.dotted(node)
+            if name is not None and name in producers:
+                return True
+            return expr_tainted(node.value)
+        if isinstance(node, ast.Subscript):
+            return expr_tainted(node.value)
+        if isinstance(node, ast.Call):
+            name = mod.dotted(node.func)
+            if name is not None:
+                if name in _LAUNDER_CALLS:
+                    return False
+                if name.startswith(_DEVICE_PREFIXES) or name in (
+                        _DEVICE_CALLS + tuple(producers)):
+                    return True
+            return any(expr_tainted(a) for a in node.args)
+        if isinstance(node, ast.BinOp):
+            return expr_tainted(node.left) or expr_tainted(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return expr_tainted(node.operand)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(expr_tainted(e) for e in node.elts)
+        if isinstance(node, ast.IfExp):
+            return expr_tainted(node.body) or expr_tainted(node.orelse)
+        return False
+
+    def name_targets(tgt: ast.AST):
+        """Plain Name binding targets only — ``self.kv`` in a tuple target
+        must not taint the ``self`` base name."""
+        if isinstance(tgt, ast.Name):
+            yield tgt.id
+        elif isinstance(tgt, (ast.Tuple, ast.List)):
+            for e in tgt.elts:
+                yield from name_targets(e)
+        elif isinstance(tgt, ast.Starred):
+            yield from name_targets(tgt.value)
+
+    for stmt in ast.walk(fn_node):
+        if isinstance(stmt, ast.Assign):
+            if expr_tainted(stmt.value):
+                for tgt in stmt.targets:
+                    for nm in name_targets(tgt):
+                        tainted.add(nm)
+            else:
+                # reassignment from a host value clears the taint
+                for tgt in stmt.targets:
+                    if isinstance(tgt, ast.Name):
+                        tainted.discard(tgt.id)
+        elif isinstance(stmt, ast.AugAssign):
+            if expr_tainted(stmt.value) and isinstance(stmt.target, ast.Name):
+                tainted.add(stmt.target.id)
+    return tainted
+
+
+@register("host-sync", severity="error", help=(
+    "Device→host sync (.item(), np.asarray, int()/float()/bool() on a "
+    "device value, if-on-array) on a serving hot path or in a jitted body. "
+    "The decode loop's contract is one packed transfer per step."))
+def check_host_sync(ctx: ModuleContext) -> None:
+    mod = ctx.module
+    cfg = ctx.config
+    producers = set(cfg.device_producers)
+    hot = mod.reachable(cfg.hotpath_roots)
+    hot |= {f.qualname for f in mod.functions if f.hotpath_marker}
+    hot |= mod.reachable(
+        [f.qualname for f in mod.functions if f.hotpath_marker])
+
+    for fn in mod.functions:
+        in_jit = fn.traced
+        in_hot = fn.qualname in hot
+        if not (in_jit or in_hot):
+            continue
+        where = "jitted body" if in_jit else "hot path"
+        tainted = _tainted_names(ctx, fn.node, producers, in_jit)
+
+        def is_device(node: ast.AST) -> bool:
+            if is_shapelike(node):
+                return False
+            if isinstance(node, ast.Name):
+                return node.id in tainted
+            if isinstance(node, ast.Attribute):
+                name = mod.dotted(node)
+                if name is not None and name in producers:
+                    return True
+                return is_device(node.value)
+            if isinstance(node, ast.Subscript):
+                return is_device(node.value)
+            if isinstance(node, ast.Call):
+                name = mod.dotted(node.func)
+                if name is not None and name in _LAUNDER_CALLS:
+                    return False
+                if name is not None and (
+                        name.startswith(_DEVICE_PREFIXES)
+                        or name in _DEVICE_CALLS or name in producers):
+                    return True
+                return any(is_device(a) for a in node.args)
+            if isinstance(node, (ast.BinOp, ast.UnaryOp)):
+                kids = ([node.left, node.right]
+                        if isinstance(node, ast.BinOp) else [node.operand])
+                return any(is_device(k) for k in kids)
+            return False
+
+        for node in ast.walk(fn.node):
+            if mod.enclosing_function(node) is not fn:
+                continue
+            if isinstance(node, ast.Call):
+                name = mod.dotted(node.func)
+                # x.item(), x.block_until_ready(), x.tolist()
+                if isinstance(node.func, ast.Attribute) and \
+                        node.func.attr in _ALWAYS_SYNC_ATTRS:
+                    base = mod.dotted(node.func.value)
+                    if base is None or not base.startswith(
+                            ("numpy.", "math.")):
+                        ctx.report(node, (
+                            f".{node.func.attr}() forces a device→host "
+                            f"sync in a {where}"))
+                    continue
+                if name in _SYNC_CALLS and node.args:
+                    ctx.report(node, (
+                        f"{name.rsplit('.', 1)[-1]}() is a blocking "
+                        f"device→host transfer in a {where}"))
+                    continue
+                if name in ("numpy.asarray", "numpy.array") and node.args \
+                        and is_device(node.args[0]):
+                    ctx.report(node, (
+                        "np.asarray on a device value blocks until the "
+                        f"array is ready ({where})"))
+                    continue
+                if isinstance(node.func, ast.Name) and \
+                        node.func.id in _CAST_BUILTINS and node.args and \
+                        is_device(node.args[0]):
+                    ctx.report(node, (
+                        f"{node.func.id}() on a device value forces a "
+                        f"device→host sync in a {where}"))
+                    continue
+            elif isinstance(node, (ast.If, ast.While)) and in_jit:
+                test = node.test
+                if is_device(test):
+                    ctx.report(test, (
+                        "branching on a traced value inside a jitted body "
+                        "— use jnp.where/lax.cond"))
+            elif isinstance(node, ast.If) and in_hot and not in_jit:
+                if is_device(node.test):
+                    ctx.report(node.test, (
+                        "if-on-device-array implicitly calls bool() — a "
+                        "blocking sync on a hot path"))

@@ -1,0 +1,201 @@
+"""pallas-tiling: TPU tile-shape and grid/index_map arity constraints.
+
+From the Mosaic lowering rules (see the Pallas guide): the last dimension
+of a VMEM tile must be a multiple of 128, and the second-to-last a
+multiple of the per-dtype sublane count — 8 for f32, 16 for bf16, 32 for
+int8/fp8 — unless it is exactly 1 (a degenerate row tile). Each
+``BlockSpec`` index_map must accept one argument per grid axis plus one
+per scalar-prefetch operand. Violations lower to mosaic errors (on TPU)
+or silent relayouts — neither shows up in interpret-mode CI.
+
+Only constant shapes are checked; dims held in variables (the dominant
+idiom in ``kernels/decode_attn.py``) are resolved one assignment deep
+when the module binds them to literal ints, otherwise skipped. Arity
+checks resolve ``grid=(b, nt)`` through tuple-literal assignments and
+skip ambiguous (multiply-assigned) names.
+"""
+from __future__ import annotations
+
+import ast
+from fnmatch import fnmatch
+from typing import Dict, List, Optional
+
+from ..astutil import call_kwarg, const_int, literal_tuple
+from ..core import ModuleContext, register
+
+_SUBLANE = {"float32": 8, "bfloat16": 16, "float16": 16,
+            "int8": 32, "uint8": 32, "float8_e4m3fn": 32}
+
+
+def _int_bindings(mod) -> Dict[str, List[Optional[int]]]:
+    """name → every int it is bound to at module/function level (None for
+    non-constant bindings). A name is resolvable iff all bindings agree."""
+    out: Dict[str, List[Optional[int]]] = {}
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    out.setdefault(tgt.id, []).append(const_int(node.value))
+    return out
+
+
+def _resolve_int(mod, bindings, node: ast.AST) -> Optional[int]:
+    v = const_int(node)
+    if v is not None:
+        return v
+    if isinstance(node, ast.Name):
+        vals = bindings.get(node.id, [])
+        consts = {v for v in vals}
+        if len(vals) >= 1 and len(consts) == 1 and None not in consts:
+            return vals[0]
+    return None
+
+
+def _resolve_tuple(mod, node: ast.AST) -> Optional[List[ast.AST]]:
+    """A tuple literal, following one Name assignment if unambiguous."""
+    elts = literal_tuple(node)
+    if elts is not None:
+        return elts
+    if isinstance(node, ast.Name):
+        found: List[List[ast.AST]] = []
+        for n in ast.walk(mod.tree):
+            if isinstance(n, ast.Assign) and any(
+                    isinstance(t, ast.Name) and t.id == node.id
+                    for t in n.targets):
+                e = literal_tuple(n.value)
+                if e is None:
+                    return None          # bound to something opaque
+                found.append(e)
+        if len(found) == 1:
+            return found[0]
+        if found and all(len(f) == len(found[0]) for f in found):
+            return found[0]              # arity agrees across branches
+    return None
+
+
+def _lambda_arity(node: ast.AST) -> Optional[int]:
+    if isinstance(node, ast.Lambda):
+        a = node.args
+        if a.vararg is not None:
+            return None
+        return len(a.posonlyargs) + len(a.args)
+    return None
+
+
+def _dtype_of(mod, node: Optional[ast.AST]) -> Optional[str]:
+    if node is None:
+        return None
+    name = mod.dotted(node)
+    if name is None:
+        return None
+    leaf = name.rsplit(".", 1)[-1]
+    return leaf if leaf in _SUBLANE else None
+
+
+def _check_tile(ctx, call_node, dims: List[ast.AST], bindings,
+                dtype: Optional[str], what: str) -> None:
+    mod = ctx.module
+    if not dims:
+        return
+    last = _resolve_int(mod, bindings, dims[-1])
+    if last is not None and last % 128 != 0 and last != 1:
+        ctx.report(call_node, (
+            f"{what} last dim {last} is not a multiple of 128 (TPU lane "
+            "width) — Mosaic will reject or relayout this tile"))
+    if len(dims) >= 2:
+        sub = _resolve_int(mod, bindings, dims[-2])
+        need = _SUBLANE.get(dtype or "float32", 8)
+        if sub is not None and sub != 1 and sub % need != 0:
+            dt = dtype or "float32 (assumed)"
+            ctx.report(call_node, (
+                f"{what} second-to-last dim {sub} is not a multiple of "
+                f"{need} (sublane count for {dt})"), severity="warning")
+
+
+@register("pallas-tiling", severity="error", help=(
+    "BlockSpec/scratch tiles must be (sublane, 128)-aligned per dtype and "
+    "index_map arity must equal len(grid) + num scalar-prefetch args."))
+def check_pallas(ctx: ModuleContext) -> None:
+    mod = ctx.module
+    if not any(fnmatch(mod.relpath, g) for g in ctx.config.kernel_globs):
+        return
+    bindings = _int_bindings(mod)
+
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = mod.dotted(node.func)
+        if name is None:
+            continue
+        leaf = name.rsplit(".", 1)[-1]
+
+        # ---- BlockSpec tile shape + index_map arity ----------------------
+        if leaf == "BlockSpec":
+            dims = None
+            if node.args:
+                dims = literal_tuple(node.args[0])
+            if dims is None:
+                shp = call_kwarg(node, "block_shape")
+                if shp is not None:
+                    dims = literal_tuple(shp)
+            if dims:
+                _check_tile(ctx, node, dims, bindings, None, "BlockSpec")
+
+        # ---- VMEM/SMEM scratch shapes -----------------------------------
+        if leaf in ("VMEM", "SMEM") and node.args:
+            dims = literal_tuple(node.args[0])
+            if dims:
+                dtype = _dtype_of(
+                    mod, node.args[1] if len(node.args) > 1 else
+                    call_kwarg(node, "dtype"))
+                _check_tile(ctx, node, dims, bindings, dtype,
+                            f"{leaf} scratch")
+
+        # ---- pallas_call grid / index_map arity -------------------------
+        if leaf == "pallas_call":
+            grid_node = call_kwarg(node, "grid")
+            grid_spec = call_kwarg(node, "grid_spec")
+            n_prefetch: Optional[int] = 0
+            if grid_spec is not None and isinstance(grid_spec, ast.Call):
+                gleaf = (mod.dotted(grid_spec.func) or "").rsplit(".", 1)[-1]
+                if gleaf == "PrefetchScalarGridSpec":
+                    grid_node = call_kwarg(grid_spec, "grid")
+                    pre = call_kwarg(grid_spec, "num_scalar_prefetch")
+                    n_prefetch = _resolve_int(mod, bindings, pre) \
+                        if pre is not None else 0
+                else:
+                    grid_node = grid_node or call_kwarg(grid_spec, "grid")
+            if grid_node is None or n_prefetch is None:
+                continue
+            grid_elts = _resolve_tuple(mod, grid_node)
+            if grid_elts is None:
+                continue
+            want = len(grid_elts) + n_prefetch
+
+            specs_holder = grid_spec if grid_spec is not None else node
+            for key in ("in_specs", "out_specs"):
+                val = call_kwarg(specs_holder, key)
+                if val is None:
+                    continue
+                spec_elts = literal_tuple(val) or [val]
+                for spec in spec_elts:
+                    if not isinstance(spec, ast.Call):
+                        continue
+                    sleaf = (mod.dotted(spec.func) or "").rsplit(".", 1)[-1]
+                    if sleaf != "BlockSpec":
+                        continue
+                    imap = None
+                    for arg in list(spec.args) + [
+                            kw.value for kw in spec.keywords
+                            if kw.arg == "index_map"]:
+                        if _lambda_arity(arg) is not None:
+                            imap = arg
+                            break
+                    if imap is None:
+                        continue
+                    arity = _lambda_arity(imap)
+                    if arity is not None and arity != want:
+                        ctx.report(spec, (
+                            f"index_map takes {arity} args but grid has "
+                            f"{len(grid_elts)} axes + {n_prefetch} scalar-"
+                            f"prefetch operands (= {want})"))

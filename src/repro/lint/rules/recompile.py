@@ -1,0 +1,142 @@
+"""recompile-hazard: patterns that defeat jax.jit's compilation cache.
+
+Three concrete hazards from this codebase's history:
+
+* a ``jax.jit`` / ``pl.pallas_call`` constructed lexically inside a
+  ``for``/``while`` body builds a fresh callable (and cache) every
+  iteration — hoist it (the engine builds step fns once in
+  ``_make_step_fns`` for exactly this reason);
+* unhashable literals (list/dict/set) passed to a parameter declared in
+  ``static_argnames`` raise at call time — or, when wrapped in tuples
+  per call site, silently key a new cache entry per call;
+* array shapes derived from raw ``len(...)`` in hot/jitted code: every
+  distinct request length is a distinct trace. Lengths must go through
+  the bucket table first (``Scheduler``'s bucketed admission).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Set
+
+from ..astutil import call_kwarg, literal_tuple
+from ..core import ModuleContext, register
+
+_SHAPE_CTORS = (
+    "jax.numpy.zeros", "jax.numpy.ones", "jax.numpy.full",
+    "jax.numpy.empty", "jax.numpy.arange")
+_BUCKET_HINTS = ("bucket", "pad", "round", "align", "tile", "chunk")
+
+
+def _static_params(mod, call: ast.Call) -> Set[str]:
+    """Names declared static in a jit(...) call expression."""
+    out: Set[str] = set()
+    for key in ("static_argnames", "static_argnums"):
+        val = call_kwarg(call, key)
+        if val is None:
+            continue
+        elts = literal_tuple(val) or [val]
+        for e in elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, str):
+                out.add(e.value)
+    return out
+
+
+@register("recompile-hazard", severity="error", help=(
+    "jit built inside a loop, unhashable values fed to static args, or "
+    "shapes keyed on unbucketed lengths — each one re-traces per call."))
+def check_recompile(ctx: ModuleContext) -> None:
+    mod = ctx.module
+
+    # --- jit/pallas_call inside a loop body ------------------------------
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        kind = mod._wrapper_kind(node)
+        if kind != "jit":
+            continue
+        # lexically inside a loop body *within the same function*: the
+        # first loop ancestor appears before any enclosing def.
+        for anc in mod.ancestors(node):
+            if isinstance(anc, (ast.For, ast.While, ast.AsyncFor)):
+                name = mod.dotted(node.func) or "jit"
+                ctx.report(node, (
+                    f"{name} constructed inside a loop builds a new "
+                    "compiled callable (and cache) every iteration — "
+                    "hoist it out of the loop"))
+                break
+            if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.Lambda)):
+                break
+
+    # --- unhashable literals into static params --------------------------
+    # Map locally-jitted names → their static param names, then inspect
+    # call sites of those names in the same module.
+    static_of: Dict[str, Set[str]] = {}
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            if mod._wrapper_kind(node.value) == "jit":
+                params = _static_params(mod, node.value)
+                if params:
+                    for tgt in node.targets:
+                        if isinstance(tgt, ast.Name):
+                            static_of[tgt.id] = params
+                        elif isinstance(tgt, ast.Attribute):
+                            dn = mod.dotted(tgt)
+                            if dn:
+                                static_of[dn] = params
+    for fn in mod.functions:
+        for deco in getattr(fn.node, "decorator_list", ()):
+            if isinstance(deco, ast.Call) and \
+                    mod._wrapper_kind(deco) == "jit":
+                params = _static_params(mod, deco)
+                if params:
+                    static_of[fn.name] = params
+
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        callee = mod.dotted(node.func)
+        if callee is None or callee not in static_of:
+            continue
+        for kw in node.keywords:
+            if kw.arg in static_of[callee] and isinstance(
+                    kw.value, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                               ast.DictComp, ast.SetComp)):
+                ctx.report(kw.value, (
+                    f"unhashable {type(kw.value).__name__.lower()} passed "
+                    f"to static arg {kw.arg!r} of {callee} — static args "
+                    "must be hashable (use a tuple) and stable across "
+                    "calls"))
+
+    # Direct jit(...) call expressions with unhashable static defaults:
+    # jax.jit(f, static_argnames=...)(..., static=[...]) is rare; the
+    # dominant local hazard is covered above.
+
+    # --- shapes from unbucketed lengths ----------------------------------
+    hot = mod.reachable(ctx.config.hotpath_roots)
+    hot |= {f.qualname for f in mod.functions if f.hotpath_marker}
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = mod.dotted(node.func)
+        if name not in _SHAPE_CTORS:
+            continue
+        fn = mod.enclosing_function(node)
+        if fn is None or not (fn.traced or fn.qualname in hot):
+            continue
+        shape_arg = node.args[0] if node.args else call_kwarg(node, "shape")
+        if shape_arg is None:
+            continue
+        for leaf in ast.walk(shape_arg):
+            if isinstance(leaf, ast.Call) and \
+                    isinstance(leaf.func, ast.Name) and leaf.func.id == "len":
+                # bucketed helpers in the expression launder the length
+                src = ast.dump(shape_arg).lower()
+                if any(h in src for h in _BUCKET_HINTS):
+                    continue
+                ctx.report(node, (
+                    f"{name.rsplit('.', 1)[-1]} shape derived from raw "
+                    "len(...) in hot/jitted code — every distinct length "
+                    "is a fresh trace; round through the bucket table"),
+                    severity="warning")
+                break

@@ -1,0 +1,80 @@
+"""tracer-leak: traced values escaping a jitted body via mutable state.
+
+Assigning a traced value to ``self.*``, a global, or a closed-over cell
+inside a jitted/traced body leaks the tracer: jax raises
+``UnexpectedTracerError`` at best, or (with a cached side table) silently
+stores a stale constant. Stores through ``Ref`` subscripts
+(``o_ref[...] = acc``) are the Pallas write idiom and are fine.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..core import ModuleContext, register
+
+
+@register("tracer-leak", severity="error", help=(
+    "Assignment to self.*/globals/closures inside a jitted body leaks a "
+    "tracer out of the trace; return the value instead."))
+def check_tracer_leak(ctx: ModuleContext) -> None:
+    mod = ctx.module
+    for fn in mod.functions:
+        if not fn.traced:
+            continue
+        declared_global = set()
+        declared_nonlocal = set()
+        for node in ast.walk(fn.node):
+            if mod.enclosing_function(node) is not fn:
+                continue
+            if isinstance(node, ast.Global):
+                declared_global.update(node.names)
+            elif isinstance(node, ast.Nonlocal):
+                declared_nonlocal.update(node.names)
+        for node in ast.walk(fn.node):
+            if mod.enclosing_function(node) is not fn:
+                continue
+            if isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for tgt in targets:
+                    if isinstance(tgt, ast.Attribute):
+                        base = tgt.value
+                        if isinstance(base, ast.Name) and base.id == "self":
+                            ctx.report(node, (
+                                f"assignment to self.{tgt.attr} inside a "
+                                "traced body leaks the tracer into object "
+                                "state — thread it through the return "
+                                "value"))
+                    elif isinstance(tgt, ast.Name):
+                        if tgt.id in declared_global:
+                            ctx.report(node, (
+                                f"assignment to global {tgt.id!r} inside a "
+                                "traced body leaks the tracer"))
+                        elif tgt.id in declared_nonlocal:
+                            ctx.report(node, (
+                                f"assignment to nonlocal {tgt.id!r} inside "
+                                "a traced body leaks the tracer into the "
+                                "enclosing scope"))
+            elif isinstance(node, ast.Call):
+                # closure.append(x) / dict.setdefault smuggles tracers into
+                # host-side containers; warn (it may be a static value).
+                if isinstance(node.func, ast.Attribute) and \
+                        node.func.attr in ("append", "extend", "add",
+                                           "setdefault", "update"):
+                    base = node.func.value
+                    if isinstance(base, ast.Name):
+                        # only when the container is not local to this fn
+                        local = False
+                        for n2 in ast.walk(fn.node):
+                            if isinstance(n2, ast.Assign) and \
+                                    mod.enclosing_function(n2) is fn and any(
+                                        isinstance(t, ast.Name)
+                                        and t.id == base.id
+                                        for t in n2.targets):
+                                local = True
+                                break
+                        if not local:
+                            ctx.report(node, (
+                                f"{base.id}.{node.func.attr}(...) inside a "
+                                "traced body may smuggle a tracer into a "
+                                "host container"), severity="warning")

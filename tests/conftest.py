@@ -90,3 +90,37 @@ def run_multidevice(code: str, n_devices: int = 8, timeout: int = 600):
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture
+def assert_flat_compiles():
+    """Context manager asserting an engine compiles NOTHING inside the
+    block — the runtime counterpart of the ``recompile-hazard`` lint.
+
+        with assert_flat_compiles(engine, compiled):   # baseline optional
+            engine.run()
+
+    Compares ``engine.compile_counts()`` after the block against the
+    baseline (default: counts on entry) per program kind; ``None`` counts
+    (cache introspection unavailable on some backends) are skipped, same
+    as the historical ad-hoc assertions in test_obs.py."""
+    import contextlib
+
+    @contextlib.contextmanager
+    def guard(engine, baseline=None):
+        before = dict(baseline if baseline is not None
+                      else engine.compile_counts())
+        yield before
+        after = engine.compile_counts()
+        assert set(after) == set(before), (
+            f"compile_counts keys changed: {sorted(before)} -> "
+            f"{sorted(after)}")
+        for kind, n in after.items():
+            want = before[kind]
+            if n is None or want is None:
+                continue
+            assert n == want, (
+                f"post-warmup recompile: {kind} compiled {n} time(s), "
+                f"expected {want}")
+
+    return guard

@@ -250,7 +250,7 @@ def test_quantized_cache_logit_tolerance(tiny_lm):
 # engine: greedy parity, slot reuse, no recompilation
 # ---------------------------------------------------------------------------
 
-def test_engine_greedy_matches_static_path(tiny_lm):
+def test_engine_greedy_matches_static_path(tiny_lm, assert_flat_compiles):
     """Acceptance: mixed-length trace through 4 slots (requests > slots, so
     slots get reused mid-run) — every request's greedy output bit-identical
     to the static path, with zero recompilation after warmup."""
@@ -262,10 +262,10 @@ def test_engine_greedy_matches_static_path(tiny_lm):
     compiled = engine.warmup(reqs)
     assert compiled["decode"] == 1                    # one program for all slots
 
-    for r in reqs:
-        engine.submit(r)
-    results = engine.run()
-    assert engine.compile_counts() == compiled        # no recompilation
+    with assert_flat_compiles(engine, compiled):      # no recompilation
+        for r in reqs:
+            engine.submit(r)
+        results = engine.run()
     assert len(results) == len(reqs)
     by_rid = {r.rid: r for r in results}
     from repro.launch.serve import static_greedy_reference
@@ -279,7 +279,7 @@ def test_engine_greedy_matches_static_path(tiny_lm):
     assert 0.0 < engine.utilization() <= 1.0
 
 
-def test_engine_warmup_fits_tight_budgets(tiny_lm):
+def test_engine_warmup_fits_tight_budgets(tiny_lm, assert_flat_compiles):
     """Warmup clones must respect prompt_len + max_new <= max_len even when
     the trace's requests leave no decode headroom (gen=1 at a full-length
     prompt): the clone's budget is clipped and decode still gets compiled
@@ -289,14 +289,14 @@ def test_engine_warmup_fits_tight_budgets(tiny_lm):
     reqs = _requests(cfg, lens=[15, 4], gens=[1, 2])
     compiled = engine.warmup(reqs)                    # must not raise
     assert compiled["decode"] == 1
-    for r in reqs:
-        engine.submit(r)
-    results = engine.run()
-    assert engine.compile_counts() == compiled
+    with assert_flat_compiles(engine, compiled):
+        for r in reqs:
+            engine.submit(r)
+        results = engine.run()
     assert sorted(len(r.tokens) for r in results) == [1, 2]
 
 
-def test_engine_burst_admits_in_one_dispatch(tiny_lm):
+def test_engine_burst_admits_in_one_dispatch(tiny_lm, assert_flat_compiles):
     """Acceptance: a burst of B same-bucket requests admits in ONE batched
     prefill dispatch (not B), with greedy outputs still bit-identical to
     the static path and zero recompilation after warmup."""
@@ -305,12 +305,12 @@ def test_engine_burst_admits_in_one_dispatch(tiny_lm):
     reqs = _requests(cfg, lens=[20, 22, 19, 24], gens=[4, 6, 3, 5])  # b32 ×4
     engine = Engine(model, params, EngineConfig(num_slots=4, max_len=max_len))
     compiled = engine.warmup(reqs)
-    for r in reqs:
-        engine.submit(r)
-    results = engine.run()
+    with assert_flat_compiles(engine, compiled):     # no recompilation
+        for r in reqs:
+            engine.submit(r)
+        results = engine.run()
     assert engine.prefill_dispatches == 1            # one device call for 4
     assert engine.prefill_admitted == len(reqs)
-    assert engine.compile_counts() == compiled       # no recompilation
     by_rid = {r.rid: r.tokens for r in results}
     step_fns = _static_step_fns(model)
     from repro.launch.serve import static_greedy_reference
@@ -340,7 +340,8 @@ def test_engine_compile_flat_across_burst_sizes(tiny_lm):
     assert engine.prefill_admitted == 10
 
 
-def test_engine_chunked_long_prompt_matches_static_path(tiny_lm):
+def test_engine_chunked_long_prompt_matches_static_path(
+        tiny_lm, assert_flat_compiles):
     """Acceptance: prompts LONGER than the largest bucket stream through
     the bucket-width chunk program and still produce greedy output
     bit-identical to the static path — including slot reuse after a
@@ -354,10 +355,10 @@ def test_engine_chunked_long_prompt_matches_static_path(tiny_lm):
                                  prompt_buckets=(8, 16)))
     compiled = engine.warmup(reqs)
     assert compiled["chunk"] == 1                    # one program, ever
-    for r in reqs:
-        engine.submit(r)
-    results = engine.run()
-    assert engine.compile_counts() == compiled       # no recompilation
+    with assert_flat_compiles(engine, compiled):     # no recompilation
+        for r in reqs:
+            engine.submit(r)
+        results = engine.run()
     # ceil(20/16) + ceil(40/16) + ceil(33/16) chunks; rid 2 (9 <= 16) is
     # a normal bucketed admission
     assert engine.chunk_dispatches == 2 + 3 + 3

@@ -1,0 +1,502 @@
+"""The static analyzer analyzed: per-rule true-positive/true-negative
+fixtures, the suppression/baseline workflow, the CLI contract, and the
+tier-1 gate — a whole-tree run over THIS repo must be clean modulo the
+checked-in baseline, so any new hazard fails the suite before CI."""
+import json
+import os
+import sys
+import textwrap
+
+import pytest
+
+from conftest import REPO
+
+from repro.lint import core as lint
+from repro.lint.astutil import Module
+from repro.lint.contracts import extract_metric_uses, load_schema_families
+
+MODULE_RULES = ("host-sync", "recompile-hazard", "tracer-leak",
+                "pallas-tiling", "dtype-drift", "register-contract")
+
+_EMPTY_SCHEMA = {"families": {"counters": [], "gauges": [],
+                              "histograms": []}}
+
+
+def lint_tree(tmp_path, files, schema=None, rules=None, config=None):
+    """Write ``files`` ({repo-relative path: source}) under a scratch root
+    shaped like this repo and lint it."""
+    for rel, src in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+    sp = tmp_path / "scripts" / "metrics_schema.json"
+    if not sp.exists():
+        sp.parent.mkdir(parents=True, exist_ok=True)
+        sp.write_text(json.dumps(schema or _EMPTY_SCHEMA))
+    return lint.run_lint(str(tmp_path), config, rules=rules)
+
+
+def rules_hit(findings):
+    return {f.rule for f in findings}
+
+
+# ---------------------------------------------------------------------------
+# host-sync
+# ---------------------------------------------------------------------------
+
+def test_host_sync_item_in_jit_flagged(tmp_path):
+    fs = lint_tree(tmp_path, {"src/repro/serving/x.py": """
+        import jax, jax.numpy as jnp
+
+        @jax.jit
+        def step(x):
+            return jnp.sum(x).item()
+        """}, rules=["host-sync"])
+    assert [f.rule for f in fs] == ["host-sync"]
+    assert ".item()" in fs[0].message and fs[0].symbol == "step"
+
+
+def test_host_sync_clean_outside_hot_paths(tmp_path):
+    # same sync, but in plain host code: not a finding
+    fs = lint_tree(tmp_path, {"src/repro/serving/x.py": """
+        import numpy as np
+
+        def summarize(arr):
+            return float(np.asarray(arr).mean())
+        """}, rules=["host-sync"])
+    assert fs == []
+
+
+def test_host_sync_static_args_branch_ok(tmp_path):
+    # branching on a static_argnames param is NOT an implicit sync
+    fs = lint_tree(tmp_path, {"src/repro/kernels/x.py": """
+        import functools, jax
+
+        @functools.partial(jax.jit, static_argnames=("fast",))
+        def f(x, fast=True):
+            if fast:
+                return x * 2
+            return x + 1
+        """}, rules=["host-sync"])
+    assert fs == []
+
+
+def test_host_sync_branch_on_traced_flagged(tmp_path):
+    fs = lint_tree(tmp_path, {"src/repro/kernels/x.py": """
+        import jax, jax.numpy as jnp
+
+        @jax.jit
+        def f(x):
+            if x:
+                return x * 2
+            return x
+        """}, rules=["host-sync"])
+    assert rules_hit(fs) == {"host-sync"}
+    assert "branching on a traced value" in fs[0].message
+
+
+def test_host_sync_hotpath_marker_and_producer_taint(tmp_path):
+    fs = lint_tree(tmp_path, {"src/repro/serving/x.py": """
+        import numpy as np
+
+        class Engine:
+            def step(self):  # lint: hotpath
+                out = self._decode(1)
+                toks = np.asarray(out)
+                return toks
+        """}, rules=["host-sync"])
+    assert len(fs) == 1 and "np.asarray" in fs[0].message
+
+
+def test_host_sync_allow_comment_suppresses(tmp_path):
+    fs = lint_tree(tmp_path, {"src/repro/serving/x.py": """
+        import numpy as np
+
+        class Engine:
+            def step(self):  # lint: hotpath
+                out = self._decode(1)
+                toks = np.asarray(out)  # lint: allow[host-sync] one per step
+                return toks
+        """}, rules=["host-sync"])
+    assert fs == []
+
+
+# ---------------------------------------------------------------------------
+# recompile-hazard
+# ---------------------------------------------------------------------------
+
+def test_recompile_jit_in_loop_flagged(tmp_path):
+    fs = lint_tree(tmp_path, {"src/repro/core/x.py": """
+        import jax
+
+        def run(fns, x):
+            out = []
+            for f in fns:
+                out.append(jax.jit(f)(x))
+            return out
+        """}, rules=["recompile-hazard"])
+    assert rules_hit(fs) == {"recompile-hazard"}
+    assert "inside a loop" in fs[0].message
+
+
+def test_recompile_module_level_jit_ok(tmp_path):
+    fs = lint_tree(tmp_path, {"src/repro/core/x.py": """
+        import functools, jax
+
+        @functools.partial(jax.jit, static_argnames=("k",))
+        def f(x, k):
+            return x[:k]
+
+        def run(xs):
+            return [f(x, k=4) for x in xs]
+        """}, rules=["recompile-hazard"])
+    assert fs == []
+
+
+def test_recompile_unhashable_static_arg_flagged(tmp_path):
+    fs = lint_tree(tmp_path, {"src/repro/core/x.py": """
+        import functools, jax
+
+        @functools.partial(jax.jit, static_argnames=("shape",))
+        def f(x, shape):
+            return x.reshape(shape)
+
+        def run(x):
+            return f(x, shape=[4, 4])
+        """}, rules=["recompile-hazard"])
+    assert len(fs) == 1 and "unhashable" in fs[0].message
+
+
+# ---------------------------------------------------------------------------
+# tracer-leak
+# ---------------------------------------------------------------------------
+
+def test_tracer_leak_self_assignment_flagged(tmp_path):
+    fs = lint_tree(tmp_path, {"src/repro/serving/x.py": """
+        import jax, jax.numpy as jnp
+
+        class M:
+            def go(self, x):
+                @jax.jit
+                def inner(x):
+                    z = jnp.exp(x)
+                    self.cache = z
+                    return z
+                return inner(x)
+        """}, rules=["tracer-leak"])
+    assert rules_hit(fs) == {"tracer-leak"}
+    assert "self.cache" in fs[0].message
+
+
+def test_tracer_leak_ref_store_is_fine(tmp_path):
+    # the Pallas write idiom: subscript stores into refs are not leaks
+    fs = lint_tree(tmp_path, {"src/repro/kernels/x.py": """
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+
+        def kern(x_ref, o_ref):
+            acc = x_ref[...] * 2
+            o_ref[...] = acc
+
+        def call(x, spec):
+            return pl.pallas_call(kern, out_shape=spec)(x)
+        """}, rules=["tracer-leak"])
+    assert fs == []
+
+
+# ---------------------------------------------------------------------------
+# pallas-tiling
+# ---------------------------------------------------------------------------
+
+BAD_KERNEL = """
+    import jax
+    from jax.experimental import pallas as pl
+
+    def kern(x_ref, o_ref):
+        o_ref[...] = x_ref[...]
+
+    def call(x, spec):
+        return pl.pallas_call(
+            kern,
+            grid=(4, 4),
+            in_specs=[pl.BlockSpec((8, 100), lambda i, j: (i, j))],
+            out_specs=pl.BlockSpec((8, 128), lambda i: (i, 0)),
+            out_shape=spec,
+        )(x)
+    """
+
+
+def test_pallas_tiling_misaligned_and_arity_flagged(tmp_path):
+    fs = lint_tree(tmp_path, {"src/repro/kernels/x.py": BAD_KERNEL},
+                   rules=["pallas-tiling"])
+    msgs = " | ".join(f.message for f in fs)
+    assert "not a multiple of 128" in msgs
+    assert "index_map takes 1 args but grid has 2" in msgs
+
+
+def test_pallas_tiling_only_checks_kernel_files(tmp_path):
+    # same code outside kernels/ is out of scope for the tiling rule
+    fs = lint_tree(tmp_path, {"src/repro/serving/x.py": BAD_KERNEL},
+                   rules=["pallas-tiling"])
+    assert fs == []
+
+
+def test_pallas_tiling_aligned_kernel_clean(tmp_path):
+    fs = lint_tree(tmp_path, {"src/repro/kernels/x.py": """
+        import jax
+        from jax.experimental import pallas as pl
+        from jax.experimental.pallas import tpu as pltpu
+        import jax.numpy as jnp
+
+        def kern(x_ref, o_ref, acc_ref):
+            o_ref[...] = x_ref[...]
+
+        def call(x, spec):
+            grid = (4, 4)
+            return pl.pallas_call(
+                kern,
+                grid=grid,
+                in_specs=[pl.BlockSpec((8, 128), lambda i, j: (i, j))],
+                out_specs=pl.BlockSpec((16, 256), lambda i, j: (i, j)),
+                out_shape=spec,
+                scratch_shapes=[pltpu.VMEM((8, 128), jnp.float32)],
+            )(x)
+        """}, rules=["pallas-tiling"])
+    assert fs == []
+
+
+# ---------------------------------------------------------------------------
+# dtype-drift
+# ---------------------------------------------------------------------------
+
+def test_dtype_drift_f64_on_jax_call_flagged(tmp_path):
+    fs = lint_tree(tmp_path, {"src/repro/models/layers.py": """
+        import jax.numpy as jnp
+
+        def make(n):
+            return jnp.zeros((n,), dtype=jnp.float64)
+        """}, rules=["dtype-drift"])
+    assert len(fs) == 1 and "float64" in fs[0].message
+
+
+def test_dtype_drift_host_numpy_f64_ok(tmp_path):
+    # GPTQ-style host-side f64 Hessian math is intentional
+    fs = lint_tree(tmp_path, {"src/repro/core/baselines/x.py": """
+        import numpy as np
+
+        def hinv(c):
+            h = np.array(c, dtype=np.float64, copy=True)
+            return np.linalg.inv(h)
+        """}, rules=["dtype-drift"])
+    assert fs == []
+
+
+def test_dtype_drift_strong_scalar_in_sensitive_file(tmp_path):
+    fs = lint_tree(tmp_path, {"src/repro/models/layers.py": """
+        import numpy as np
+
+        def scale(x):
+            return x * np.float32(2.0)
+        """}, rules=["dtype-drift"])
+    assert len(fs) == 1 and "strong-typed" in fs[0].message
+    # weak-typed Python scalar: clean
+    fs = lint_tree(tmp_path / "b", {"src/repro/models/layers.py": """
+        def scale(x):
+            return x * 2.0
+        """}, rules=["dtype-drift"])
+    assert fs == []
+
+
+# ---------------------------------------------------------------------------
+# contracts
+# ---------------------------------------------------------------------------
+
+def test_register_contract_bad_return_flagged(tmp_path):
+    fs = lint_tree(tmp_path, {"src/repro/core/x.py": """
+        from repro.core import registry as _registry
+
+        @_registry.register("bad", spec_cls=None)
+        def bad(w, stats, spec):
+            return w * 2
+        """}, rules=["register-contract"])
+    assert len(fs) == 1 and "not a CompressResult" in fs[0].message
+
+
+def test_register_contract_helper_indirection_ok(tmp_path):
+    fs = lint_tree(tmp_path, {"src/repro/core/x.py": """
+        from repro.core import registry as _registry
+
+        def _wrap(res):
+            return _registry.CompressResult(theta=res)
+
+        @_registry.register("direct", spec_cls=None)
+        def direct(w, stats, spec):
+            return _registry.CompressResult(theta=w)
+
+        @_registry.register("via_helper", spec_cls=None)
+        def via_helper(w, stats, spec):
+            return _wrap(w)
+        """}, rules=["register-contract"])
+    assert fs == []
+
+
+def test_metrics_contract_bidirectional(tmp_path):
+    schema = {"families": {"counters": ["good_total", "ghost_total"],
+                           "gauges": [], "histograms": []}}
+    fs = lint_tree(tmp_path, {"src/repro/obs/x.py": """
+        def setup(m):
+            m.counter("good_total", "declared")
+            m.counter("rogue_total", "not declared")
+        """}, schema=schema, rules=["metrics-contract"])
+    msgs = " | ".join(f.message for f in fs)
+    assert "rogue_total" in msgs                   # code -> schema
+    assert "ghost_total" in msgs                   # schema -> code
+    assert "good_total" not in msgs
+
+
+def test_metric_extraction_resolves_engine_idioms(tmp_path):
+    src = textwrap.dedent("""
+        def setup(m):
+            def counter(key, help):
+                return m.counter(f"engine_{key}_total", help)
+            c = {k: counter(k, h) for k, h in (
+                ("alpha", "a"), ("beta", "b"))}
+            m.histogram("lat_seconds", "latency")
+            return c
+        """)
+    mod = Module("x.py", "x.py", src)
+    uses = {(u.kind, u.name, u.exact) for u in extract_metric_uses(mod)}
+    assert ("counters", "engine_alpha_total", True) in uses
+    assert ("counters", "engine_beta_total", True) in uses
+    assert ("histograms", "lat_seconds", True) in uses
+
+
+# ---------------------------------------------------------------------------
+# baseline workflow + fingerprints
+# ---------------------------------------------------------------------------
+
+def test_baseline_roundtrip_and_line_drift(tmp_path):
+    files = {"src/repro/serving/x.py": """
+        import jax, jax.numpy as jnp
+
+        @jax.jit
+        def step(x):
+            return jnp.sum(x).item()
+        """}
+    fs = lint_tree(tmp_path, files, rules=["host-sync"])
+    assert len(fs) == 1
+    bp = tmp_path / "baseline.json"
+    lint.save_baseline(str(bp), fs)
+    baseline = lint.load_baseline(str(bp))
+
+    # same finding, new line number (comment inserted): still baselined
+    shifted = {"src/repro/serving/x.py": """
+        import jax, jax.numpy as jnp
+
+        # an unrelated comment that shifts every line
+        @jax.jit
+        def step(x):
+            return jnp.sum(x).item()
+        """}
+    root2 = tmp_path / "v2"
+    fs2 = lint_tree(root2, shifted, rules=["host-sync"])
+    new, old, stale = lint.partition(fs2, baseline)
+    assert new == [] and len(old) == 1 and stale == []
+
+    # finding fixed: baseline entry goes stale
+    fixed = {"src/repro/serving/x.py": """
+        import jax, jax.numpy as jnp
+
+        @jax.jit
+        def step(x):
+            return jnp.sum(x)
+        """}
+    root3 = tmp_path / "v3"
+    fs3 = lint_tree(root3, fixed, rules=["host-sync"])
+    new, old, stale = lint.partition(fs3, baseline)
+    assert new == [] and old == [] and len(stale) == 1
+
+
+def test_registry_rejects_duplicates_and_lists_rules():
+    names = lint.available()
+    for rule in MODULE_RULES + ("metrics-contract",):
+        assert rule in names
+    with pytest.raises(ValueError):
+        lint.register("host-sync")(lambda ctx: None)
+
+
+def test_severity_override_and_off():
+    cfg = lint.LintConfig(severity_overrides=(
+        ("src/repro/legacy/*", "host-sync", "warning"),
+        ("src/repro/vendor/*", "*", "off")))
+    assert cfg.severity_for("host-sync", "src/repro/legacy/a.py",
+                            "error") == "warning"
+    assert cfg.severity_for("dtype-drift", "src/repro/vendor/b.py",
+                            "error") == "off"
+    assert cfg.severity_for("host-sync", "src/repro/serving/c.py",
+                            "error") == "error"
+
+
+# ---------------------------------------------------------------------------
+# CLI + tier-1 gate
+# ---------------------------------------------------------------------------
+
+def _cli():
+    sys.path.insert(0, os.path.join(REPO, "scripts"))
+    import run_lint
+    return run_lint
+
+
+def test_cli_whole_tree_clean_modulo_baseline():
+    """The tier-1 gate: linting THIS repo with the checked-in baseline
+    must be clean — a new hazard anywhere in src/repro fails here first."""
+    assert _cli().main(["--format", "json"]) == 0
+
+
+def test_cli_seeded_violation_exits_nonzero(tmp_path):
+    bad = tmp_path / "seeded.py"
+    bad.write_text(textwrap.dedent("""
+        import jax, jax.numpy as jnp
+
+        @jax.jit
+        def step(x):
+            return jnp.sum(x).item()
+        """))
+    assert _cli().main([str(bad)]) == 1
+
+
+def test_cli_update_baseline_then_clean(tmp_path, capsys):
+    cli = _cli()
+    root = tmp_path
+    (root / "src/repro").mkdir(parents=True)
+    (root / "scripts").mkdir()
+    (root / "scripts/metrics_schema.json").write_text(
+        json.dumps(_EMPTY_SCHEMA))
+    (root / "src/repro/x.py").write_text(textwrap.dedent("""
+        import jax, jax.numpy as jnp
+
+        @jax.jit
+        def step(x):
+            return jnp.sum(x).item()
+        """))
+    args = ["--root", str(root), "--baseline", "scripts/lint_baseline.json"]
+    assert cli.main(args) == 1                       # new finding
+    assert cli.main(args + ["--update-baseline"]) == 0
+    assert cli.main(args) == 0                       # baselined now
+    report = root / "report.json"
+    assert cli.main(args + ["--no-baseline", "--format", "json",
+                            "--output", "report.json"]) == 1
+    data = json.loads(report.read_text())
+    assert data["counts"]["new"] == 1
+    assert data["new"][0]["rule"] == "host-sync"
+
+
+def test_schema_families_match_snapshot_checker():
+    """The shared contract file parses and covers the core families the
+    CI snapshot checks require."""
+    fams = load_schema_families(
+        os.path.join(REPO, "scripts", "metrics_schema.json"))
+    assert "engine_requests_total" in fams["counters"]
+    assert "compress_layers_total" in fams["counters"]
+    assert "request_ttft_seconds" in fams["histograms"]
+    assert "engine_queue_depth" in fams["gauges"]

@@ -173,7 +173,7 @@ def test_resume_ticket_ordering_and_admission():
 # engine parity: paged vs slot
 # ---------------------------------------------------------------------------
 
-def test_paged_matches_slot_greedy_dense(tiny_lm):
+def test_paged_matches_slot_greedy_dense(tiny_lm, assert_flat_compiles):
     """Acceptance: mixed-length greedy trace through the paged engine is
     bit-identical to the slot engine (page_size divides max_len)."""
     cfg, model, params = tiny_lm
@@ -184,10 +184,10 @@ def test_paged_matches_slot_greedy_dense(tiny_lm):
     paged = Engine(model, params, EngineConfig(
         num_slots=4, max_len=max_len, kv_layout="paged", page_size=8))
     compiled = paged.warmup(reqs)
-    for r in reqs:
-        paged.submit(r)
-    got = {r.rid: r.tokens for r in paged.run()}
-    assert paged.compile_counts() == compiled  # no recompilation after warmup
+    with assert_flat_compiles(paged, compiled):  # no recompilation after warmup
+        for r in reqs:
+            paged.submit(r)
+        got = {r.rid: r.tokens for r in paged.run()}
     for req in reqs:
         assert got[req.rid] == want[req.rid], req.rid
     assert paged.alloc.pages_in_use == paged.page_stats()["prefix_cached_pages"]
